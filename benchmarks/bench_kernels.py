@@ -1,0 +1,49 @@
+"""Kernel-layer microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python) —
+their numbers here are correctness artifacts, not performance. The XLA-jnp
+distance blocks are the CPU-meaningful timing; the TPU story for the kernels
+is the §Roofline/§Perf analysis. Each row: name, us_per_call, derived info.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise
+from repro.kernels import ops
+
+
+def _time(f, *args, reps=5) -> float:
+    jax.block_until_ready(f(*args))          # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(c: int = 1024, r: int = 1024, d: int = 512) -> list[dict]:
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (c, d))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (r, d))
+    rows = []
+    for metric in ("l1", "l2", "sql2", "cosine"):
+        f = jax.jit(pairwise(metric))
+        us = _time(f, x, y)
+        flops = c * r * d * (2 if metric != "l1" else 3)
+        rows.append({"name": f"xla_{metric}_{c}x{r}x{d}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"{flops / (us / 1e6) / 1e9:.1f}GFLOP/s"})
+    # interpret-mode kernel correctness spot-check (small, or it takes minutes)
+    xs, ys = x[:128], y[:128]
+    for name, kf, rf in (("dot", ops.kernel_dot, lambda a, b: a @ b.T),
+                         ("l1", ops.kernel_l1, pairwise("l1"))):
+        got = kf(xs, ys)
+        want = rf(xs, ys)
+        err = float(jnp.max(jnp.abs(got - want)))
+        rows.append({"name": f"pallas_{name}_interpret_128x128x{d}",
+                     "us_per_call": -1,
+                     "derived": f"maxerr={err:.2e} (interpret=correctness only)"})
+    return rows

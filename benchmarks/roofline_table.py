@@ -1,0 +1,60 @@
+"""§Roofline table generator: reads the dry-run JSONL artifacts and renders
+the per-(arch x shape x mesh) roofline rows for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path)]
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | step (s) | useful-FLOP frac | MFU | live GB/chip |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"SKIP: {r['reason'][:40]} | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                       f"| - | - | - | ERROR | - | - | - | - |")
+            continue
+        live = r["per_device_bytes"]["total_live"] / 1e9
+        uf = r.get("useful_flops_frac")
+        mfu = r.get("mfu")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | {r['bottleneck']} "
+            f"| {r['step_time_s']:.4g} "
+            f"| {uf:.3f} | {mfu if mfu is None else round(mfu, 4)} "
+            f"| {live:.1f} |")
+    return "\n".join(out)
+
+
+def run(paths=("results_dryrun_16x16.jsonl",)) -> list[dict]:
+    rows = []
+    for p in paths:
+        for r in load(p):
+            if r["status"] != "ok":
+                continue
+            rows.append({"name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                         "us_per_call": round(r["step_time_s"] * 1e6, 1),
+                         "derived": f"bot={r['bottleneck']},mfu={r.get('mfu')}"})
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    paths = sys.argv[1:] or ["results_dryrun_16x16.jsonl",
+                             "results_dryrun_2x16x16.jsonl"]
+    for p in paths:
+        print(f"\n## {p}\n")
+        print(render_markdown(load(p)))

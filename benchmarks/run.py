@@ -1,0 +1,61 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the scaffold contract), one
+section per benchmark. Scale knobs are CI-sized; pass --full for paper-scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.get("name") or "_".join(
+            str(r.get(k)) for k in ("dataset", "algo", "arm", "pulls_per_arm")
+            if r.get(k) is not None)
+        us = r.get("us_per_call", r.get("sec", 0) and r["sec"] * 1e6)
+        derived = r.get("derived") or json.dumps(
+            {k: v for k, v in r.items()
+             if k not in ("name", "us_per_call", "sec", "dataset", "algo")})
+        print(f"{name},{us},{derived!r}")
+        sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "algorithms", "curves", "correlation",
+                             "kernels", "roofline"])
+    args = ap.parse_args()
+    scale = 2 if args.full else 1
+
+    from benchmarks import (bench_algorithms, bench_correlation,
+                            bench_error_curves, bench_kernels, roofline_table)
+
+    sections = {
+        "algorithms": lambda: bench_algorithms.run(
+            n=2048 * scale, d=256 * scale, trials=10 * scale),
+        "curves": lambda: bench_error_curves.run(
+            n=1024 * scale, d=128 * scale, trials=20 * scale),
+        "correlation": lambda: bench_correlation.run(
+            n=1024 * scale, d=256 * scale),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: roofline_table.run(
+            ("results_dryrun_16x16.jsonl", "results_dryrun_2x16x16.jsonl")),
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===")
+        t0 = time.time()
+        _emit(fn())
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

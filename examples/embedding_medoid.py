@@ -1,0 +1,88 @@
+"""The paper's technique wired into the LM stack: representative-example
+selection over transformer hidden states via Correlated Sequential Halving.
+
+Use case (data pruning / coreset selection): embed a pile of sequences with a
+model, then pick the most-representative sequence = the medoid of the
+embedding vectors — in O(n log n) distance evaluations instead of O(n^2).
+Works with ANY of the 10 supported architectures (--arch).
+
+    PYTHONPATH=src python examples/embedding_medoid.py --arch qwen2.5-14b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import corr_sh_medoid, exact_medoid, schedule_pulls
+from repro.models import encdec as ED
+from repro.models import recurrent as R
+from repro.models import transformer as T
+from repro.models.model import build_model
+
+
+def embed_sequences(cfg, params, tokens, frames=None, image_embed=None):
+    """Mean-pooled final hidden states — model-agnostic embedding."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        logits, _, _ = T.transformer_forward(params, cfg, tokens,
+                                             image_embed=image_embed)
+    elif cfg.family == "ssm":
+        logits, _ = R.xlstm_forward(params, cfg, tokens)
+    elif cfg.family == "hybrid":
+        logits, _ = R.hybrid_forward(params, cfg, tokens)
+    elif cfg.family == "audio":
+        enc = ED.encode(params, cfg, frames)
+        logits, _ = ED.decode_train(params, cfg, tokens, enc)
+    # logits as embedding proxy (mean over positions, f32)
+    return jnp.mean(logits.astype(jnp.float32), axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--num-seqs", type=int, default=512)
+    ap.add_argument("--seq-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+
+    # synthesize a corpus in small batches and embed it
+    embs = []
+    bs = 32
+    extra = {}
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    for i in range(args.num_seqs // bs):
+        toks = jax.random.randint(jax.random.fold_in(key, i),
+                                  (bs, args.seq_len), 0, cfg.vocab_size)
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 1000 + i),
+                (bs, cfg.num_audio_frames, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            kw["image_embed"] = jax.random.normal(
+                jax.random.fold_in(key, 1000 + i),
+                (bs, cfg.num_image_tokens, cfg.d_model), dt)
+        embs.append(embed_sequences(cfg, params, toks, **kw))
+    embs = jnp.concatenate(embs)                          # (n, V)
+    n = embs.shape[0]
+    print(f"embedded {n} sequences with {args.arch} (dim {embs.shape[1]})")
+
+    budget = 20 * n
+    t0 = time.time()
+    rep = int(corr_sh_medoid(embs, jax.random.key(2), budget=budget,
+                             metric="l2"))
+    t_corr = time.time() - t0
+    truth = int(exact_medoid(embs, "l2"))
+    print(f"representative sequence (corrSH): #{rep}  "
+          f"[{schedule_pulls(n, budget):,} pulls, {t_corr:.2f}s]")
+    print(f"representative sequence (exact):  #{truth}  [{n * n:,} pulls]")
+    print(f"match: {rep == truth}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Serve a small model with batched requests (continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+import json
+
+import jax
+
+from repro.launch.serve import Request, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    srv = Server(args.arch, smoke=True, batch_slots=3, max_len=96)
+    key = jax.random.key(0)
+    reqs = [Request(rid=i,
+                    prompt=jax.random.randint(jax.random.fold_in(key, i),
+                                              (12,), 0, srv.cfg.vocab_size),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    stats = srv.run(reqs)
+    print(json.dumps(stats, indent=2))
+    for r in reqs:
+        print(f"request {r.rid}: generated {r.out}")
+
+
+if __name__ == "__main__":
+    main()

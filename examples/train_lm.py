@@ -1,0 +1,46 @@
+"""End-to-end LM training driver.
+
+Default: a reduced internlm2 on CPU, 200 steps, with checkpoints + resume.
+``--m100`` trains a ~100M-parameter config for a few hundred steps (sized for
+real hardware; runs on CPU too, slowly).
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --m100 --steps 300
+"""
+import argparse
+import json
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--m100", action="store_true",
+                    help="~100M-param config instead of the smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.m100:
+        # ~100M params: 12L x 768 with an 8k-ish vocab
+        import repro.configs.registry as registry
+        from repro.configs import get_smoke_config
+        base = get_smoke_config(args.arch)
+        cfg100 = base.scaled(num_layers=12, d_model=768, num_heads=12,
+                             num_kv_heads=4, d_ff=3072, vocab_size=8192,
+                             head_dim=64)
+        registry.get_smoke_config = lambda name: cfg100  # inject
+        out = train(args.arch, smoke=True, steps=args.steps, batch_size=8,
+                    seq_len=512, ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    else:
+        out = train(args.arch, smoke=True, steps=args.steps, batch_size=8,
+                    seq_len=128, ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    print(json.dumps(out, indent=2))
+    assert out["final_loss"] < out["first_loss"], "training must reduce loss"
+    print("loss decreased — training works end to end "
+          f"({out['first_loss']:.3f} -> {out['final_loss']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.base import (InputShape, MLACfg, ModelCfg, MoECfg, SHAPES,
+                                SSMCfg, cell_is_supported)
+from repro.configs.registry import (ARCH_NAMES, all_cells, get_config,
+                                    get_smoke_config, input_specs, list_configs)

@@ -1,0 +1,81 @@
+"""Architecture registry + ShapeDtypeStruct input specs for every cell."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, InputShape, ModelCfg, cell_is_supported
+
+_MODULES = {
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelCfg:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelCfg:
+    return importlib.import_module(_MODULES[name]).SMOKE
+
+
+def list_configs() -> Dict[str, ModelCfg]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+# ------------------------------------------------------------ input specs --
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelCfg, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the full token batch (+ modality stubs).
+    decode: one new token per sequence (the KV cache spec comes from
+    ``cache_specs``)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.num_audio_frames, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["image_embed"] = _sds((B, cfg.num_image_tokens, cfg.d_model), dt)
+        return batch
+    # decode: one token per sequence
+    return {"token": _sds((B,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelCfg, shape: InputShape) -> dict:
+    """Shape/dtype of the decode cache at context length = shape.seq_len."""
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch,
+                                                   shape.seq_len))
+
+
+def all_cells():
+    """Yield (arch_name, shape, supported, reason) for all 40 cells."""
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        for shape in SHAPES.values():
+            ok, reason = cell_is_supported(cfg, shape)
+            yield name, shape, ok, reason

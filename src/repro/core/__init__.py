@@ -1,0 +1,21 @@
+"""Paper core: Correlated Sequential Halving medoid identification."""
+from repro.core.corr_sh import (
+    CorrSHResult,
+    corr_sh_medoid,
+    correlated_sequential_halving,
+    round_schedule,
+    schedule_pulls,
+)
+from repro.core.distances import METRICS, full_distance_matrix, pairwise
+from repro.core.exact import exact_medoid, exact_theta
+from repro.core.hardness import HardnessStats, hardness_stats, predicted_error_bound
+from repro.core.meddit import MedditResult, meddit_medoid
+from repro.core.rand import rand_medoid
+
+__all__ = [
+    "CorrSHResult", "corr_sh_medoid", "correlated_sequential_halving",
+    "round_schedule", "schedule_pulls", "METRICS", "full_distance_matrix",
+    "pairwise", "exact_medoid", "exact_theta", "HardnessStats",
+    "hardness_stats", "predicted_error_bound", "MedditResult",
+    "meddit_medoid", "rand_medoid",
+]

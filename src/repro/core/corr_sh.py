@@ -1,0 +1,140 @@
+"""Correlated Sequential Halving (Algorithm 1 of the paper).
+
+The crucial systems observation: given ``(n, budget)``, the per-round sizes
+
+    s_r  = |S_r|   (number of surviving arms)
+    t_r  = clip(floor(budget / (s_r * ceil(log2 n))), 1, n)
+
+are *deterministic Python integers* — so every round's distance block
+``(s_r, t_r)`` has a static shape and the entire algorithm traces into a single
+XLA program (the Python loop over rounds unrolls). No dynamic shapes, no host
+round-trips, no data-dependent control flow except the final ``t_r == n``
+exact-output branch, which is also static.
+
+Faithful to the paper:
+  * shared reference set per round (the correlation trick),
+  * sampling without replacement (permutation prefix),
+  * survivors = ceil(|S_r| / 2) arms with smallest estimates,
+  * if t_r == n the round's estimates are exact -> output argmin immediately.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise
+
+PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class Round:
+    """Static per-round schedule entry."""
+    survivors: int   # s_r going *into* the round
+    num_refs: int    # t_r
+    exact: bool      # t_r == n -> estimates are exact, output now
+
+    @property
+    def pulls(self) -> int:
+        return self.survivors * self.num_refs
+
+
+def round_schedule(n: int, budget: int) -> list[Round]:
+    """The paper's deterministic round schedule for (n, budget)."""
+    if n < 1:
+        raise ValueError("need at least one point")
+    if n == 1:
+        return []
+    log2n = max(1, math.ceil(math.log2(n)))
+    rounds: list[Round] = []
+    s = n
+    for _ in range(log2n):
+        t = min(max(budget // (s * log2n), 1), n)
+        exact = t >= n
+        rounds.append(Round(survivors=s, num_refs=t, exact=exact))
+        if exact or s <= 1:
+            break
+        s = math.ceil(s / 2)
+        if s == 1:
+            break
+    return rounds
+
+
+def schedule_pulls(n: int, budget: int) -> int:
+    """Total distance computations the schedule will actually perform."""
+    return sum(r.pulls for r in round_schedule(n, budget))
+
+
+@dataclass
+class CorrSHResult:
+    medoid: jnp.ndarray                 # scalar int32 index
+    pulls: int                          # total distance computations (static)
+    rounds: list[Round] = field(default_factory=list)
+    theta_hat: Optional[jnp.ndarray] = None  # final-round estimates
+
+
+def _sample_refs(key: jax.Array, n: int, t: int) -> jnp.ndarray:
+    """t reference indices, uniform without replacement (permutation prefix)."""
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    return jax.random.permutation(key, n)[:t].astype(jnp.int32)
+
+
+def correlated_sequential_halving(
+    data: jnp.ndarray,
+    budget: int,
+    key: jax.Array,
+    metric: str = "l2",
+    pairwise_fn: Optional[PairwiseFn] = None,
+) -> CorrSHResult:
+    """Run Algorithm 1. ``data: (n, d)``; returns the medoid index.
+
+    ``pairwise_fn`` overrides the distance block implementation (e.g. with the
+    Pallas kernel wrapper from ``repro.kernels.ops``); defaults to the pure-jnp
+    blocked distance for ``metric``.
+    """
+    n = int(data.shape[0])
+    dist = pairwise_fn if pairwise_fn is not None else pairwise(metric)
+    rounds = round_schedule(n, budget)
+    if not rounds:  # n == 1
+        return CorrSHResult(medoid=jnp.zeros((), jnp.int32), pulls=0)
+
+    idx = jnp.arange(n, dtype=jnp.int32)  # surviving arm indices, shrinks per round
+    theta_hat = None
+    for r, rd in enumerate(rounds):
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        cand_rows = data[idx]                  # (s_r, d)  static gather
+        ref_rows = data[refs]                  # (t_r, d)
+        theta_hat = jnp.mean(dist(cand_rows, ref_rows), axis=1)  # (s_r,)
+        if rd.exact or idx.shape[0] <= 2:
+            # exact estimates (t_r == n) or nothing left to halve: output argmin
+            return CorrSHResult(
+                medoid=idx[jnp.argmin(theta_hat)],
+                pulls=sum(x.pulls for x in rounds[: r + 1]),
+                rounds=rounds[: r + 1],
+                theta_hat=theta_hat,
+            )
+        keep = math.ceil(idx.shape[0] / 2)
+        # smallest-theta half survives; top_k on negated values, static k
+        _, order = jax.lax.top_k(-theta_hat, keep)
+        idx = idx[order]
+
+    return CorrSHResult(
+        medoid=idx[jnp.argmin(theta_hat)],
+        pulls=sum(x.pulls for x in rounds),
+        rounds=rounds,
+        theta_hat=theta_hat,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric"))
+def corr_sh_medoid(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                   metric: str = "l2") -> jnp.ndarray:
+    """Jitted entry point returning just the medoid index."""
+    return correlated_sequential_halving(data, budget, key, metric).medoid

@@ -1,0 +1,81 @@
+"""Theorem 2.1 hardness quantities: Delta_i, rho_i, sigma, H2, H~2.
+
+These are the data-dependent constants the paper uses to predict corrSH's
+advantage over independent-sampling bandits:
+
+  Delta_i = theta_i - theta_1                       (arm gap; arms sorted)
+  sigma   = sqrt(max_i Var_J d(x_i, x_J))           (independent-sampling scale)
+  rho_i   = std_J[d(x_1,x_J) - d(x_i,x_J)] / sigma  (correlation gain, <= ~2)
+
+  H2  = max_{i>=2} i / Delta_i^2                    (independent difficulty [7])
+  H~2 = max_{i>=2} i * rho_(i)^2 / Delta_(i)^2      (correlated difficulty,
+                                                     arms sorted by Delta/rho)
+
+The paper's headline theory number is the ratio H2 / H~2 (6.6 on RNA-Seq 20k,
+4.8 on MNIST).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise
+
+
+class HardnessStats(NamedTuple):
+    theta: jnp.ndarray     # (n,) exact centralities, sorted ascending
+    order: jnp.ndarray     # (n,) original indices in sorted order
+    delta: jnp.ndarray     # (n,) gaps; delta[0] = 0
+    rho: jnp.ndarray       # (n,) correlation factors; rho[0] = 0
+    sigma: jnp.ndarray     # scalar
+    h2: jnp.ndarray        # scalar
+    h2_tilde: jnp.ndarray  # scalar
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def hardness_stats(data: jnp.ndarray, metric: str = "l2") -> HardnessStats:
+    """Exact O(n^2) computation of all Theorem 2.1 quantities (benchmark-scale n)."""
+    n = data.shape[0]
+    dmat = pairwise(metric)(data, data)              # (n, n), D[i, j] = d(x_i, x_j)
+    theta = jnp.mean(dmat, axis=1)
+    order = jnp.argsort(theta)
+    theta_s = theta[order]
+    delta = theta_s - theta_s[0]
+
+    # sigma^2 = max_i Var_J d(x_i, x_J) — the sub-Gaussian scale for
+    # independent sampling (Hoeffding proxy used throughout the paper).
+    var_i = jnp.var(dmat, axis=1)
+    sigma = jnp.sqrt(jnp.max(var_i))
+
+    # rho_i * sigma = std_J[ d(x_1, x_J) - d(x_i, x_J) ]  with x_1 the medoid.
+    best = order[0]
+    diff = dmat[best][None, :] - dmat[order]         # (n, n) rows follow sorted arms
+    rho = jnp.std(diff, axis=1) / jnp.maximum(sigma, 1e-12)
+
+    i_idx = jnp.arange(n, dtype=jnp.float32) + 1.0   # 1-based arm index
+    safe_delta = jnp.maximum(delta, 1e-12)
+    # H2: arms already sorted by Delta (ascending); skip i = 1 (the medoid)
+    h2_terms = jnp.where(i_idx >= 2, i_idx / safe_delta**2, -jnp.inf)
+    h2 = jnp.max(h2_terms)
+
+    # H~2: re-sort arms by Delta/rho ascending (medoid stays first)
+    ratio = jnp.where(i_idx >= 2, safe_delta / jnp.maximum(rho, 1e-12), -jnp.inf)
+    perm = jnp.argsort(jnp.where(i_idx >= 2, ratio, -jnp.inf))
+    delta_p = safe_delta[perm]
+    rho_p = rho[perm]
+    ht_terms = jnp.where(i_idx >= 2, i_idx * rho_p**2 / delta_p**2, -jnp.inf)
+    h2_tilde = jnp.max(ht_terms)
+
+    return HardnessStats(theta=theta_s, order=order, delta=delta, rho=rho,
+                         sigma=sigma, h2=h2, h2_tilde=h2_tilde)
+
+
+def predicted_error_bound(n: int, budget: int, stats: HardnessStats) -> jnp.ndarray:
+    """Theorem 2.1 coarse upper bound on failure probability."""
+    import math
+    log2n = max(1.0, math.log2(n))
+    expo = budget / (16.0 * stats.h2_tilde * stats.sigma**2 * log2n)
+    return jnp.minimum(3.0 * log2n * jnp.exp(-expo), 1.0)

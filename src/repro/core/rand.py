@@ -1,0 +1,25 @@
+"""RAND baseline [Eppstein & Wang 2006]: non-adaptive uniform reference sampling.
+
+Measures the distance between every point and a set of m reference points
+chosen uniformly at random, then returns the empirical argmin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise
+
+
+@functools.partial(jax.jit, static_argnames=("num_refs", "metric", "replace"))
+def rand_medoid(data: jnp.ndarray, key: jax.Array, *, num_refs: int,
+                metric: str = "l2", replace: bool = True) -> jnp.ndarray:
+    n = data.shape[0]
+    if replace:
+        refs = jax.random.randint(key, (num_refs,), 0, n)
+    else:
+        refs = jax.random.permutation(key, n)[:num_refs]
+    theta_hat = jnp.mean(pairwise(metric)(data, data[refs]), axis=1)
+    return jnp.argmin(theta_hat).astype(jnp.int32)

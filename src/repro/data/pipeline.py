@@ -1,0 +1,73 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Production properties implemented here:
+  * stateless indexing: batch t is a pure function of (seed, t) -> restart at
+    any step reproduces the exact stream (checkpoint stores only `step`);
+  * per-host sharding: each data-parallel rank draws its own slice of the
+    global batch from disjoint PRNG streams (no host exchange);
+  * modality stubs (audio frames / image embeddings) ride along per config.
+
+The generator synthesizes Zipf-ish token streams with local n-gram structure
+so cross-entropy actually *decreases* during the integration tests (uniform
+random tokens would pin the loss at log V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class DataCfg:
+    seed: int = 0
+    dp_rank: int = 0
+    dp_size: int = 1
+
+
+def batch_at(cfg: ModelCfg, shape: InputShape, step: int,
+             data: DataCfg = DataCfg()) -> dict:
+    """The global batch for `step`, restricted to this rank's slice."""
+    assert shape.global_batch % data.dp_size == 0
+    local_b = shape.global_batch // data.dp_size
+    key = jax.random.fold_in(jax.random.key(data.seed), step)
+    key = jax.random.fold_in(key, data.dp_rank)
+    kt, km, kf = jax.random.split(key, 3)
+
+    V = cfg.vocab_size
+    # Zipf-ish marginal + first-order structure: token ~ f(prev) with noise
+    base = jax.random.categorical(
+        kt, _zipf_logits(V), shape=(local_b, shape.seq_len))
+    prev = jnp.roll(base, 1, axis=1)
+    mix = jax.random.bernoulli(km, 0.5, base.shape)
+    tokens = jnp.where(mix, (prev * 31 + 7) % V, base).astype(jnp.int32)
+    batch = {"tokens": tokens}
+
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            kf, (local_b, cfg.num_audio_frames, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.random.normal(
+            kf, (local_b, cfg.num_image_tokens, cfg.d_model), dt)
+    return batch
+
+
+def _zipf_logits(v: int) -> jnp.ndarray:
+    ranks = jnp.arange(1, v + 1, dtype=jnp.float32)
+    return -1.1 * jnp.log(ranks)
+
+
+def stream(cfg: ModelCfg, shape: InputShape, start_step: int = 0,
+           data: DataCfg = DataCfg()) -> Iterator[dict]:
+    """Resumable iterator: `stream(..., start_step=k)` skips to batch k with
+    O(1) work (stateless indexing — the fault-tolerance hook)."""
+    t = start_step
+    while True:
+        yield batch_at(cfg, shape, t, data)
+        t += 1

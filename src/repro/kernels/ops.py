@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding to block multiples, metric plumbing (Gram trick for
+ℓ2/sqℓ2/cosine), and CPU fallback: on non-TPU backends the kernels run in
+``interpret=True`` mode (numerically identical, Python-executed) so the whole
+framework is testable on this container. ``pairwise_kernel(metric)`` returns a
+drop-in replacement for ``repro.core.distances.pairwise(metric)`` and can be
+passed to ``correlated_sequential_halving(pairwise_fn=...)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pairwise_distance as pk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_dot(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Pairwise inner products via the MXU kernel. (C, d) x (R, d) -> (C, R)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c, r = x.shape[0], y.shape[0]
+    xp = _pad_to(x, pk.BC, pk.BD)
+    yp = _pad_to(y, pk.BR, pk.BD)
+    return pk.dot_pairwise(xp, yp, interpret=interp)[:c, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_l1(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    """Pairwise ℓ1 distances via the VPU kernel."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c, r = x.shape[0], y.shape[0]
+    xp = _pad_to(x, pk.BC, pk.BD)
+    yp = _pad_to(y, pk.BR, pk.BD)
+    return pk.l1_pairwise(xp, yp, interpret=interp)[:c, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_l1_centrality(x: jnp.ndarray, y: jnp.ndarray,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Fused mean_j ℓ1(x_i, y_j): (C, d) x (R, d) -> (C,). Never materializes
+    the (C, R) matrix — the memory-roofline optimization for big ref sets."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c, r = x.shape[0], y.shape[0]
+    xp = _pad_to(x, pk.BC, pk.BD)
+    yp = _pad_to(y, pk.BR, pk.BD)
+    sums = pk.l1_centrality(xp, yp, r_true=r, interpret=interp)[:c, 0]
+    return sums / r
+
+
+def _norms_sq(a: jnp.ndarray) -> jnp.ndarray:
+    af = a.astype(jnp.float32)
+    return jnp.sum(af * af, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_sql2(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    g = kernel_dot(x, y, interpret)
+    return jnp.maximum(_norms_sq(x)[:, None] + _norms_sq(y)[None, :] - 2.0 * g, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_l2(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    return jnp.sqrt(kernel_sql2(x, y, interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_cosine(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    xn = x.astype(jnp.float32) / jnp.maximum(
+        jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True), 1e-12)
+    yn = y.astype(jnp.float32) / jnp.maximum(
+        jnp.linalg.norm(y.astype(jnp.float32), axis=-1, keepdims=True), 1e-12)
+    return 1.0 - kernel_dot(xn, yn, interpret)
+
+
+_KERNELS = {
+    "l1": kernel_l1,
+    "l2": kernel_l2,
+    "sql2": kernel_sql2,
+    "cosine": kernel_cosine,
+}
+
+
+def pairwise_kernel(metric: str):
+    """Kernel-backed drop-in for ``repro.core.distances.pairwise(metric)``."""
+    try:
+        return _KERNELS[metric]
+    except KeyError:
+        raise ValueError(f"unknown metric {metric!r}") from None

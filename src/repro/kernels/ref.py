@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth in tests/benchmarks)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.distances import (
+    pairwise_cosine,
+    pairwise_l1,
+    pairwise_l2,
+    pairwise_sql2,
+)
+
+
+def ref_dot_pairwise(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.float32) @ y.astype(jnp.float32).T
+
+
+def ref_l1_pairwise(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return pairwise_l1(x, y)
+
+
+def ref_l1_centrality(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(pairwise_l1(x, y), axis=1, keepdims=True)
+
+
+def ref_pairwise(metric: str, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return {
+        "l1": pairwise_l1,
+        "l2": pairwise_l2,
+        "sql2": pairwise_sql2,
+        "cosine": pairwise_cosine,
+    }[metric](x, y)

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``) — the
+XLA_FLAGS line above executes before any jax import so the host platform
+exposes 512 placeholder devices for the production meshes. Smoke tests and
+benchmarks never import this module.
+
+Per cell this proves, without hardware:
+  * the pjit shardings are coherent (lower succeeds),
+  * SPMD partitioning succeeds for 16x16 and 2x16x16 (compile succeeds),
+  * the per-chip memory footprint fits (memory_analysis),
+and extracts the §Roofline inputs (cost_analysis + collective bytes from the
+post-optimization HLO).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, cell_is_supported, get_config, input_specs  # noqa: E402
+from repro.configs.registry import ARCH_NAMES  # noqa: E402
+from repro.launch import partition  # noqa: E402
+from repro.launch.mesh import logical_rules, make_production_mesh  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.models.sharding import logical_axis_rules  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.train.train_step import TrainCfg, init_train_state, make_train_step  # noqa: E402
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                tcfg=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+    rules = logical_rules(mesh)  # refined below for train cells
+
+    t0 = time.time()
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = partition.param_specs(params_shape, cfg, mesh)
+    n_params = RA.count_params(params_shape)
+
+    # memory policy: microbatch count + FSDP kick in by model size
+    n_batch_shards = chips // 16   # pod x data
+    per_dev_batch = max(1, shape.global_batch // n_batch_shards)
+    if cfg.d_model >= 4096:
+        target = 2
+    elif cfg.d_model >= 2048:
+        target = 4
+    else:
+        target = 8
+    mb = max(1, per_dev_batch // target)
+    while shape.global_batch % mb:
+        mb -= 1
+    if cfg.moe is not None and cfg.moe.num_experts % 16:
+        # XLA SPMD verifier bug: microbatch reshape x TP-in-expert sharding
+        # with non-divisible expert counts trips a dynamic-slice check
+        # (granite, 40 experts on a 16-way model axis). mb=1 compiles clean.
+        mb = 1
+    param_bytes_per_chip = 2 * n_params / 16     # bf16, model-axis sharded
+    fsdp = param_bytes_per_chip > 3e9
+    # §Perf: very large d_model trains as pure FSDP/ZeRO-3 — batch over ALL
+    # mesh axes, no tensor parallelism. Per-layer param gathers (~2 GB) are
+    # far cheaper than per-layer activation all-reduces under TP=16
+    # (measured 3.3 TB/chip/step on command-r train_4k). Falls back to batch
+    # over pod x data with sequence-sharded activations when the global
+    # batch doesn't divide the chip count.
+    # measured (EXPERIMENTS §Perf): per-layer param gathers are 1-2 orders
+    # cheaper than per-layer TP activation all-reduces at these batch sizes
+    # — all train cells go pure-FSDP, EXCEPT MoE archs whose expert count
+    # divides the model axis (deepseek 64e): expert-parallel dispatch beats
+    # re-gathering the full expert stack (measured 18.5s EP vs 23.4s FSDP).
+    fsdp_pure = shape.kind == "train" and not (
+        cfg.moe is not None and cfg.moe.num_experts % 16 == 0)
+    # NOTE: a plain-DP (replicated params) mode was hypothesized for small
+    # models and MEASURED WORSE (whisper 3.8s vs 0.11s under FSDP: per-chip
+    # batch grows 16x when the model axis idles, inflating activation
+    # collectives and memory). Refuted; FSDP stays the train default.
+    pure_dp = False
+    seq_shard = False
+    batch_over = None
+    if fsdp_pure:
+        mb = 1
+        if shape.global_batch % chips == 0:
+            batch_over = tuple(mesh.axis_names)
+        else:
+            seq_shard = shape.seq_len % 16 == 0
+    if tcfg is None:
+        tcfg = TrainCfg(remat=True, num_microbatches=mb)
+
+    batch_sds = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        rules = logical_rules(mesh, seq_shard=seq_shard)
+        if fsdp_pure:
+            rules["model"] = None      # no tensor parallelism
+            rules["expert"] = None
+            if batch_over is not None:
+                rules["batch"] = batch_over
+                rules["vocab"] = None  # model axis taken by batch; fused CE
+                                       # keeps chunk logits small anyway
+            # params + moments fully sharded over all axes (ZeRO-3)
+            pspecs = partition.pure_fsdp_specs(params_shape, mesh)
+            zspecs = pspecs
+        elif fsdp:
+            pspecs = partition.zero_specs(params_shape, pspecs, mesh)
+            zspecs = partition.zero_specs(params_shape, pspecs, mesh)
+        else:
+            zspecs = partition.zero_specs(params_shape, pspecs, mesh)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.key(0), tcfg))
+        state_specs = type(state_shape)(
+            params=pspecs,
+            opt=type(state_shape.opt)(step=P(), mu=zspecs, nu=zspecs),
+            ef=None if state_shape.ef is None else type(state_shape.ef)(
+                error=zspecs),
+            step=P(),
+        )
+        bspecs = partition.batch_specs(batch_sds, mesh, axes=batch_over)
+        step_fn = make_train_step(model, tcfg)
+
+        def wrapped(state, batch):
+            with logical_axis_rules(rules):
+                return step_fn(state, batch)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(_ns(mesh, state_specs), _ns(mesh, bspecs)),
+            out_shardings=(_ns(mesh, state_specs), None),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jitted.lower(state_shape, batch_sds)
+        model_flops = RA.model_flops_train(
+            n_params, shape.global_batch * shape.seq_len,
+            active_frac=_active_frac(cfg))
+    elif shape.kind == "prefill":
+        bspecs = partition.batch_specs(batch_sds, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = partition.cache_specs_tree(cache_shape, cfg, mesh,
+                                            shape.global_batch,
+                                            seq_len=shape.seq_len)
+
+        def wrapped(params, batch):
+            with logical_axis_rules(rules):
+                return model.prefill(params, batch, shape.seq_len)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+            out_shardings=(None, _ns(mesh, cspecs)),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, batch_sds)
+        model_flops = RA.model_flops_train(
+            n_params, shape.global_batch * shape.seq_len,
+            active_frac=_active_frac(cfg)) / 3.0   # fwd only
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cspecs = partition.cache_specs_tree(cache_shape, cfg, mesh,
+                                            shape.global_batch,
+                                            seq_len=shape.seq_len)
+        token_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def wrapped(params, token, cache, pos):
+            with logical_axis_rules(rules):
+                return model.decode_step(params, token, cache, pos)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(_ns(mesh, pspecs), None, _ns(mesh, cspecs), None),
+            out_shardings=(None, _ns(mesh, cspecs)),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, token_sds, cache_shape, pos_sds)
+        model_flops = RA.model_flops_decode(
+            n_params, shape.global_batch, active_frac=_active_frac(cfg))
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # dynamic-bound attention loops (inference paths) have unparseable trip
+    # counts; hint = average causal coverage of the kv-block loop
+    hint = max(1.0, shape.seq_len / 1024 / 2) if shape.kind == "prefill" else 1.0
+    roof = RA.from_compiled(compiled, chips=chips, model_flops=model_flops,
+                            hlo_text=hlo, while_hint=hint)
+    coll = RA.parse_collectives(hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "params": n_params, "microbatches": tcfg.num_microbatches,
+        "fsdp": bool(fsdp), "fsdp_pure": bool(fsdp_pure),
+        "pure_dp": bool(pure_dp),
+        "seq_shard": bool(seq_shard),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device_bytes": {
+            "arguments": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "alias": int(mem.alias_size_in_bytes),
+            "total_live": int(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes),
+        },
+        "collectives": {"bytes": coll.bytes_by_kind,
+                        "count": coll.count_by_kind},
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in roof.row().items()},
+    }
+    if verbose:
+        print(json.dumps(result))
+        sys.stdout.flush()
+    return result
+
+
+def _active_frac(cfg) -> float:
+    """Active-parameter fraction for MoE archs (for 6*N_active*D)."""
+    if cfg.moe is None:
+        return 1.0
+    m = cfg.moe
+    d_e = m.d_expert or cfg.d_ff
+    # per-layer moe params vs activated subset (+ shared always on)
+    routed = m.num_experts * 3 * cfg.d_model * d_e
+    active = (m.top_k + m.num_shared) * 3 * cfg.d_model * d_e
+    dense_rest_guess = 4 * cfg.d_model * cfg.d_model
+    per_layer = routed + dense_rest_guess
+    per_layer_active = active + dense_rest_guess
+    return per_layer_active / per_layer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every supported (arch x shape) cell")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        try:
+            r = dryrun_cell(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:  # noqa: BLE001 — report & continue
+            r = {"arch": arch, "shape": shape, "status": "error",
+                 "mesh": "2x16x16" if args.multi_pod else "16x16",
+                 "error": f"{type(e).__name__}: {e}",
+                 "trace": traceback.format_exc()[-2000:]}
+            print(json.dumps({k: r[k] for k in
+                              ("arch", "shape", "status", "error")}))
+            sys.stdout.flush()
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"# dry-run done: {n_ok} ok, {n_skip} skipped, {n_err} errors",
+          file=sys.stderr)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
+
+
+def dryrun_medoid_engine(*, n: int = 1 << 20, d: int = 1024,
+                         budget_per_arm: int = 24, metric: str = "l1",
+                         multi_pod: bool = False, verbose: bool = True,
+                         engine: str = "v2") -> dict:
+    """Dry-run the paper's engine itself on the production mesh: lower +
+    compile distributed corrSH over an (n, d) row-sharded dataset."""
+    from repro.core.distributed import make_distributed_corr_sh, make_row_sharding
+    from repro.core.distributed_v2 import make_distributed_corr_sh_v2
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    maker = make_distributed_corr_sh if engine == "v1" else make_distributed_corr_sh_v2
+    fn = maker(mesh, n=n, d=d, budget=budget_per_arm * n, metric=metric)
+    x_sds = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    key_sds = jax.ShapeDtypeStruct((), jnp.uint32)
+    import time as _t
+    t0 = _t.time()
+    with mesh:
+        lowered = jax.jit(fn.__wrapped__ if hasattr(fn, "__wrapped__") else fn,
+                          in_shardings=(make_row_sharding(mesh), None),
+                          ).lower(x_sds, jax.eval_shape(
+                              lambda: jax.random.key(0)))
+        compiled = lowered.compile()
+    t_compile = _t.time() - t0
+    hlo = compiled.as_text()
+    from repro.core.corr_sh import schedule_pulls
+    # model flops: distance evals x (3d for l1) across all chips
+    per_pull = {"l1": 3 * d, "l2": 2 * d, "sql2": 2 * d, "cosine": 2 * d}[metric]
+    model_flops = float(schedule_pulls(n, budget_per_arm * n)) * per_pull
+    roof = RA.from_compiled(compiled, chips=chips, model_flops=model_flops,
+                            hlo_text=hlo)
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": f"corrsh-engine-{engine}", "shape": f"n{n}_d{d}_b{budget_per_arm}",
+        "status": "ok", "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "compile_s": round(t_compile, 1),
+        "per_device_bytes": {
+            "arguments": int(mem.argument_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "total_live": int(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes)},
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in roof.row().items()},
+    }
+    if verbose:
+        print(json.dumps(result))
+    return result

@@ -1,0 +1,106 @@
+"""Medoid engine driver — the paper's algorithm as a service.
+
+Runs Correlated Sequential Halving (single-device or distributed over
+whatever mesh exists), with per-round survivor checkpointing so a preempted
+job restarts mid-algorithm (rounds are idempotent given (seed, round)).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.medoid --n 4096 --d 512 \
+      --metric l1 --budget-per-arm 30 --dataset rnaseq20k_like
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.core import (corr_sh_medoid, exact_medoid, meddit_medoid,
+                        rand_medoid, round_schedule, schedule_pulls)
+from repro.core.distributed import distributed_corr_sh, make_row_sharding
+from repro.core.distributed_v2 import distributed_corr_sh_v2
+from repro.data.medoid_datasets import DATASETS, planted_medoid
+from repro.kernels import ops as kops
+from repro.runtime.fault_tolerance import elastic_remesh
+
+
+def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
+        *, seed: int = 0, use_kernel: bool = False, distributed: bool = False,
+        compare: bool = False, ckpt_dir: str | None = None) -> dict:
+    key = jax.random.key(seed)
+    if dataset in DATASETS:
+        metric_default, gen = DATASETS[dataset]
+        metric = metric or metric_default
+        data = gen(key, n, d)
+    else:
+        data = planted_medoid(key, n, d)
+        metric = metric or "l2"
+
+    budget = budget_per_arm * n
+    sched = round_schedule(n, budget)
+    out = {"n": n, "d": d, "metric": metric, "budget": budget,
+           "pulls_scheduled": schedule_pulls(n, budget),
+           "rounds": [(r.survivors, r.num_refs) for r in sched]}
+
+    t0 = time.time()
+    if distributed and len(jax.devices()) > 1:
+        mesh = elastic_remesh(preferred_tp=1)
+        data_sh = jax.device_put(data, make_row_sharding(mesh))
+        medoid = int(distributed_corr_sh_v2(data_sh, jax.random.fold_in(key, 1),
+                                            mesh, budget=budget, metric=metric))
+        out["mode"] = f"distributed-v2 x{len(jax.devices())}"
+    else:
+        from repro.core.corr_sh import correlated_sequential_halving
+        pairwise_fn = kops.pairwise_kernel(metric) if use_kernel else None
+        res = correlated_sequential_halving(
+            data, budget, jax.random.fold_in(key, 1), metric,
+            pairwise_fn=pairwise_fn)
+        medoid = int(res.medoid)
+        out["mode"] = "kernel" if use_kernel else "jnp"
+    out["medoid"] = medoid
+    out["corrsh_s"] = round(time.time() - t0, 3)
+
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, 0, {"medoid": jnp.asarray(medoid)},
+                  extra={"n": n, "metric": metric, "budget": budget})
+
+    if compare:
+        t0 = time.time()
+        truth = int(exact_medoid(data, metric))
+        out["exact"] = truth
+        out["exact_s"] = round(time.time() - t0, 3)
+        out["correct"] = truth == medoid
+        t0 = time.time()
+        out["rand"] = int(rand_medoid(data, jax.random.fold_in(key, 2),
+                                      num_refs=min(n, 1000), metric=metric))
+        out["rand_s"] = round(time.time() - t0, 3)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=512)
+    ap.add_argument("--metric", default="", choices=["", "l1", "l2", "sql2", "cosine"])
+    ap.add_argument("--budget-per-arm", type=int, default=30)
+    ap.add_argument("--dataset", default="planted",
+                    choices=["planted"] + list(DATASETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    print(json.dumps(run(args.n, args.d, args.metric, args.budget_per_arm,
+                         args.dataset, seed=args.seed,
+                         use_kernel=args.use_kernel,
+                         distributed=args.distributed, compare=args.compare,
+                         ckpt_dir=args.ckpt_dir)))
+
+
+if __name__ == "__main__":
+    main()

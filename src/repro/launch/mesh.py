@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run flow where
+XLA_FLAGS must be set before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips, one v5e pod) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def logical_rules(mesh, seq_shard: bool = False) -> dict:
+    """Logical-axis mapping installed around model code (see models.sharding).
+
+    ``seq_shard=True`` maps the logical "seq" axis (used on residual-stream
+    constraints) to the model axis — Megatron-style sequence parallelism:
+    activations between blocks live seq-sharded, attention/MLP gather/scatter
+    around their TP compute, halving collective bytes vs all-reduce and
+    cutting live activation memory by the TP degree. Enabled per-cell by the
+    launcher for large-d_model training shapes.
+    """
+    return {
+        "batch": batch_axes(mesh),
+        "model": "model",
+        "expert": "model",
+        "vocab": "model",   # vocab/logits sharding survives pure-FSDP mode
+        "seq": "model" if seq_shard else None,
+    }

@@ -1,0 +1,131 @@
+"""Serving driver: batched prefill + decode loop with continuous batching.
+
+Production structure on a real pod; runs end-to-end on CPU with reduced
+configs. Requests enter a queue; the scheduler packs them into the fixed
+decode batch, prefills new sequences, decodes one token per step for every
+live sequence, and retires finished ones (continuous batching — slot reuse).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --requests 6 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.registry import ARCH_NAMES
+from repro.models.model import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray            # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Fixed-batch continuous-batching decode server (greedy sampling)."""
+
+    def __init__(self, arch: str, *, smoke: bool = True, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        self.model = build_model(self.cfg)
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.params = self.model.init(jax.random.key(0))
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: self.model.decode_step(p, tok, cache, pos))
+        # one cache per slot (slot-wise so prefill can replace one sequence)
+        self.caches = [None] * batch_slots
+        self.positions = [0] * batch_slots
+        self.live: list[Optional[Request]] = [None] * batch_slots
+
+    def _extra(self, batch_size: int):
+        extra = {}
+        dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+        if self.cfg.family == "audio":
+            extra["frames"] = jnp.zeros(
+                (batch_size, self.cfg.num_audio_frames, self.cfg.d_model), dt)
+        if self.cfg.family == "vlm":
+            extra["image_embed"] = jnp.zeros(
+                (batch_size, self.cfg.num_image_tokens, self.cfg.d_model), dt)
+        return extra
+
+    def admit(self, req: Request) -> bool:
+        for i in range(self.slots):
+            if self.live[i] is None:
+                batch = {"tokens": req.prompt[None, :], **self._extra(1)}
+                logits, cache = self.model.prefill(self.params, batch,
+                                                   self.max_len)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                req.out.append(int(tok[0]))
+                self.caches[i] = cache
+                self.positions[i] = req.prompt.shape[0]
+                self.live[i] = req
+                return True
+        return False
+
+    def step(self):
+        """One decode step for every live slot (slot-batched serially here;
+        on hardware the slots share one batched decode_step)."""
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            tok = jnp.asarray([req.out[-1]], jnp.int32)
+            logits, self.caches[i] = self._decode(
+                self.params, tok, self.caches[i], self.positions[i])
+            nxt = int(jnp.argmax(logits, -1)[0])
+            req.out.append(nxt)
+            self.positions[i] += 1
+            if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
+                req.done = True
+                self.live[i] = None
+
+    def run(self, requests: list[Request]) -> dict:
+        pending = list(requests)
+        t0 = time.time()
+        steps = 0
+        while pending or any(r is not None for r in self.live):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1
+        return {"requests": len(requests), "decode_steps": steps,
+                "wall_s": round(time.time() - t0, 2),
+                "tokens": sum(len(r.out) for r in requests)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_NAMES))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    srv = Server(args.arch, smoke=args.smoke)
+    key = jax.random.key(7)
+    reqs = [Request(rid=i,
+                    prompt=jax.random.randint(jax.random.fold_in(key, i),
+                                              (args.prompt_len,), 0,
+                                              srv.cfg.vocab_size),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    print(json.dumps(srv.run(reqs)))
+
+
+if __name__ == "__main__":
+    main()

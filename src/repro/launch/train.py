@@ -1,0 +1,150 @@
+"""End-to-end training driver.
+
+Runs real steps on whatever devices exist (CPU in this container, a pod in
+production): builds the mesh from the live device count (elastic), shards
+params/optimizer with the same partition rules the dry-run proves out at
+512 chips, streams the deterministic data pipeline, checkpoints atomically,
+auto-resumes, and records straggler statistics.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import InputShape
+from repro.configs.registry import ARCH_NAMES
+from repro.data.pipeline import DataCfg, batch_at
+from repro.launch import partition
+from repro.launch.mesh import logical_rules
+from repro.models.model import build_model
+from repro.models.sharding import logical_axis_rules
+from repro.runtime.fault_tolerance import StepWatchdog, elastic_remesh, run_with_restarts
+from repro.train.train_step import TrainCfg, TrainState, init_train_state, make_train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          batch_size: int = 8, seq_len: int = 128, ckpt_dir: str | None = None,
+          ckpt_every: int = 20, tcfg: TrainCfg | None = None,
+          grad_compression: bool = False, log_every: int = 10) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    shape = InputShape("custom", seq_len, batch_size, "train")
+    model = build_model(cfg)
+    tcfg = tcfg or TrainCfg(peak_lr=1e-3, warmup_steps=max(2, steps // 10),
+                            total_steps=steps, remat=True,
+                            grad_compression=grad_compression)
+
+    mesh = elastic_remesh(preferred_tp=min(16, len(jax.devices())))
+    rules = logical_rules(mesh)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = partition.param_specs(params_shape, cfg, mesh)
+
+    state_shape = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0), tcfg))
+    state_specs = type(state_shape)(
+        params=pspecs,
+        opt=type(state_shape.opt)(step=P(), mu=pspecs, nu=pspecs),
+        ef=None if state_shape.ef is None else type(state_shape.ef)(error=pspecs),
+        step=P(),
+    )
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+
+    step_fn = make_train_step(model, tcfg)
+
+    def wrapped(state, batch):
+        with logical_axis_rules(rules):
+            return step_fn(state, batch)
+
+    batch0 = batch_at(cfg, shape, 0, DataCfg())
+    bspecs = partition.batch_specs(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch0),
+        mesh)
+    jitted = jax.jit(wrapped, in_shardings=(ns(state_specs), ns(bspecs)),
+                     out_shardings=(ns(state_specs), None), donate_argnums=(0,))
+
+    # ---- init or resume -----------------------------------------------------
+    start_step = 0
+    with mesh:
+        state = init_train_state(model, jax.random.key(42), tcfg)
+        state = jax.device_put(state, ns(state_specs))
+        if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+            state, meta = ckpt.restore(ckpt_dir, state_shape,
+                                       shardings=ns(state_specs))
+            start_step = meta["step"]
+            print(f"# resumed from step {start_step}", file=sys.stderr)
+
+    watchdog = StepWatchdog()
+    losses = []
+
+    def do_step(t: int) -> int:
+        nonlocal state
+        b = jax.device_put(batch_at(cfg, shape, t, DataCfg()), ns(bspecs))
+        t0 = time.time()
+        with mesh:
+            state, metrics = jitted(state, b)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        straggler = watchdog.record(dt)
+        losses.append(loss)
+        if t % log_every == 0:
+            print(json.dumps({"step": t, "loss": round(loss, 4),
+                              "sec": round(dt, 3),
+                              "straggler": straggler}), file=sys.stderr)
+        if ckpt_dir and (t + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, t + 1, state)
+        return t + 1
+
+    def on_restart(step_, exc):
+        nonlocal state
+        print(f"# restart after {type(exc).__name__} at step {step_}",
+              file=sys.stderr)
+        if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+            with mesh:
+                st, meta = ckpt.restore(ckpt_dir, state_shape,
+                                        shardings=ns(state_specs))
+            state = st
+            return meta["step"]
+        return step_
+
+    run_with_restarts(do_step, start_step=start_step, total_steps=steps,
+                      on_restart=on_restart)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, state)
+    return {"final_loss": losses[-1] if losses else None,
+            "first_loss": losses[0] if losses else None,
+            "stragglers": watchdog.stragglers, "steps": steps}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_NAMES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args(argv)
+    out = train(args.arch, smoke=args.smoke, steps=args.steps,
+                batch_size=args.batch, seq_len=args.seq_len,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                grad_compression=args.grad_compression)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

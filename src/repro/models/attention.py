@@ -1,0 +1,243 @@
+"""GQA attention: blockwise (flash-style) training/prefill path + decode path.
+
+Training/prefill uses a two-level blockwise softmax: an outer ``lax.scan`` over
+query blocks and an inner ``lax.fori_loop`` over KV blocks with *dynamic*
+bounds derived from causality and the sliding window — so local-attention
+layers (gemma3) and causal masking skip entire KV blocks instead of masking
+wasted FLOPs. Online-softmax carries (m, l, acc) in f32.
+
+Layouts: activations (B, S, H, Dh); KV caches (B, S_max, KV, Dh) so decode
+appends with a single dynamic_update_slice on axis 1.
+
+``window`` may be a *traced* per-layer scalar (scan-over-layers passes the
+layer's window in as data): 0 means global causal attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, dtype, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": L.dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": L.dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": L.dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, num_heads, num_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, S, num_kv_heads, head_dim)
+    v = v.reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window=0,
+                    q_offset: int = 0,
+                    block_q: int = 512,
+                    block_kv: int = 1024,
+                    scale: Optional[float] = None,
+                    differentiable: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, KV, Dh) -> (B, Sq, H, Dh).
+
+    ``window`` 0 = unbounded; >0 = attend only to the last ``window`` keys
+    (inclusive of self). May be traced.
+
+    ``differentiable=True`` (training) dispatches to the custom-VJP flash
+    implementation in ``repro.models.flash`` (recompute-based backward,
+    O(S*Dh) activation memory). Inference paths keep the block-skipping
+    dynamic-bound loop below.
+    """
+    if differentiable:
+        from repro.models.flash import flash_attention_trainable
+        return flash_attention_trainable(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            block_q=block_q, block_kv=block_kv, scale=scale)
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, _ = k.shape
+    Dv = v.shape[-1]                                    # may differ (MLA)
+    rep = H // KV
+    scale = scale or (1.0 / math.sqrt(Dh))
+
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq = (Sq + pq) // bq
+    nkv = (Skv + pkv) // bkv
+
+    qf = q.astype(jnp.float32) * scale
+    # (nq, B, bq, KV, rep, Dh)
+    qb = qf.reshape(B, nq, bq, KV, rep, Dh).transpose(1, 0, 2, 3, 4, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    window_t = jnp.asarray(window, jnp.int32)
+
+    def q_block(carry, inp):
+        qblk, qi = inp                                  # (B, bq, KV, rep, Dh)
+        q_start = q_offset + qi * bq
+        q_pos = q_start + jnp.arange(bq)                # (bq,)
+
+        if causal:
+            kv_hi = jnp.minimum((q_start + bq + bkv - 1) // bkv, nkv)
+        else:
+            kv_hi = jnp.asarray(nkv, jnp.int32)
+        kv_lo = jnp.where(window_t > 0,
+                          jnp.maximum((q_start - window_t + 1) // bkv, 0), 0)
+        kv_lo = jnp.where(causal | (window_t > 0), kv_lo, 0).astype(jnp.int32)
+
+        def body(t, st):
+            m, l, acc = st
+            kblk = jax.lax.dynamic_slice_in_dim(kf, t * bkv, bkv, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vf, t * bkv, bkv, axis=1)
+            # scores: (B, KV, rep, bq, bkv)
+            s = jnp.einsum("bqkrd,bjkd->bkrqj", qblk, kblk)
+            k_pos = t * bkv + jnp.arange(bkv)
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            mask &= k_pos[None, :] < Skv                 # padded keys
+            wmask = (q_pos[:, None] - k_pos[None, :]) < window_t
+            mask &= jnp.where(window_t > 0, wmask, True)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # explicit mask multiply: fully-masked blocks (m_new still
+            # NEG_INF) must contribute 0, not exp(0)
+            p = jnp.exp(s - m_new[..., None]) * mask.astype(jnp.float32)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkrqj,bjkd->bkrqd", p, vblk)
+            acc_new = acc * corr[..., None] + pv
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((B, KV, rep, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, bq, Dv), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(kv_lo, kv_hi, body, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)     # (B, KV, rep, bq, Dh)
+        out = out.transpose(0, 3, 1, 2, 4)               # (B, bq, KV, rep, Dh)
+        return carry, out
+
+    _, outs = jax.lax.scan(q_block, 0, (qb, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     pos, *, window=0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention. q: (B, H, Dh); caches: (B, S_max, KV, Dh);
+    pos: () or (B,) current position (number of valid tokens = pos + 1)."""
+    B, H, Dh = q.shape
+    _, Smax, KV, _ = cache_k.shape
+    rep = H // KV
+    scale = scale or (1.0 / math.sqrt(Dh))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    qf = q.astype(jnp.float32).reshape(B, KV, rep, Dh) * scale
+    s = jnp.einsum("bkrd,bjkd->bkrj", qf, cache_k.astype(jnp.float32))
+    idx = jnp.arange(Smax)
+    mask = idx[None, :] <= pos[:, None]                  # (B, Smax)
+    window_t = jnp.asarray(window, jnp.int32)
+    wmask = (pos[:, None] - idx[None, :]) < window_t
+    mask &= jnp.where(window_t > 0, wmask, True)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrj,bjkd->bkrd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------- module API --
+
+def self_attn_apply(params, x, *, num_heads, num_kv_heads, head_dim,
+                    theta, window=0, q_offset: int = 0,
+                    positions: Optional[jnp.ndarray] = None,
+                    differentiable: bool = False) -> jnp.ndarray:
+    """Full-sequence causal self attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if positions is None:
+        positions = q_offset + jnp.arange(S)[None, :]
+    q = L.apply_rope(q, positions, theta)
+    k = L.apply_rope(k, positions, theta)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_offset=q_offset, differentiable=differentiable)
+    out = out.reshape(B, S, num_heads * head_dim)
+    return out @ params["wo"], (k, v)
+
+
+def self_attn_decode(params, x, cache_k, cache_v, pos, *, num_heads,
+                     num_kv_heads, head_dim, theta, window=0):
+    """x: (B, 1, d). Returns (out (B, 1, d), new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B, 1))
+    q = L.apply_rope(q, posv, theta)
+    k = L.apply_rope(k, posv, theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                  pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                  pos, axis=1)
+    out = decode_attention(q[:, 0], cache_k, cache_v, pos, window=window)
+    out = out.reshape(B, 1, num_heads * head_dim)
+    return out @ params["wo"], cache_k, cache_v
+
+
+def cross_attn_apply(params, x, kv_k, kv_v, *, num_heads, num_kv_heads,
+                     head_dim, differentiable: bool = False) -> jnp.ndarray:
+    """Non-causal cross attention against precomputed K/V (B, S_kv, KV, Dh)."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    out = flash_attention(q, kv_k, kv_v, causal=False, window=0,
+                          differentiable=differentiable)
+    out = out.reshape(B, S, num_heads * head_dim)
+    return out @ params["wo"]
+
+
+def cross_kv(params, src, *, num_kv_heads, head_dim):
+    """Project encoder/image features to cross-attention K/V once."""
+    B, S, _ = src.shape
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (k.reshape(B, S, num_kv_heads, head_dim),
+            v.reshape(B, S, num_kv_heads, head_dim))

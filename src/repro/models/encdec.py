@@ -1,0 +1,198 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment spec the conv audio frontend is a STUB: ``input_specs``
+feeds precomputed frame embeddings (B, S_enc, d_model). The backbone is
+faithful Whisper: pre-LN transformer, non-causal encoder self-attention,
+decoder with causal self-attention + cross-attention, GELU MLPs (non-gated),
+sinusoidal encoder positions / learned decoder positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+def _dtype(cfg: ModelCfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(key, cfg: ModelCfg, dt):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model),
+        "attn": A.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.resolved_head_dim, dt,
+                            qkv_bias=True),
+        "ln2": L.layernorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelCfg, dt):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model),
+        "self": A.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.resolved_head_dim, dt,
+                            qkv_bias=True),
+        "ln_x": L.layernorm_init(cfg.d_model),
+        "cross": A.attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                             cfg.num_kv_heads, cfg.resolved_head_dim, dt,
+                             qkv_bias=True),
+        "ln2": L.layernorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def encdec_init(key, cfg: ModelCfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    enc_l = cfg.encoder_layers or cfg.num_layers
+    return {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "pos_dec": L.embed_init(ks[1], 8192, cfg.d_model, dt),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dt))(
+            jax.random.split(ks[2], enc_l)),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dt))(
+            jax.random.split(ks[3], cfg.num_layers)),
+        "ln_enc": L.layernorm_init(cfg.d_model),
+        "ln_f": L.layernorm_init(cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelCfg, frames: jnp.ndarray,
+           differentiable: bool = False) -> jnp.ndarray:
+    """frames: (B, S_enc, d_model) precomputed embeddings (conv stub)."""
+    B, S, d = frames.shape
+    x = frames + _sinusoid(S, d).astype(frames.dtype)[None]
+    x = constrain(x, "batch", None, None)
+
+    def body(x, pl):
+        h = L.layernorm(pl["ln1"], x)
+        q, k, v = A._project_qkv(pl["attn"], h, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim)
+        attn = A.flash_attention(q, k, v, causal=False, window=0,
+                                 differentiable=differentiable)
+        attn = attn.reshape(B, S, -1) @ pl["attn"]["wo"]
+        x = x + attn
+        x = x + L.mlp_apply(pl["mlp"], L.layernorm(pl["ln2"], x),
+                            act="gelu", gated=False)
+        return x, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.layernorm(params["ln_enc"], x)
+
+
+def decode_train(params, cfg: ModelCfg, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray, remat: bool = False,
+                 collect_cache: bool = False, return_hidden: bool = False):
+    """Teacher-forced decoder pass -> (logits, cache)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos_dec"][jnp.arange(S)][None]
+
+    def body(x, pl):
+        h = L.layernorm(pl["ln1"], x)
+        q, k, v = A._project_qkv(pl["self"], h, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim)
+        attn = A.flash_attention(q, k, v, causal=True, window=0,
+                                 differentiable=not collect_cache)
+        x = x + attn.reshape(B, S, -1) @ pl["self"]["wo"]
+        h = L.layernorm(pl["ln_x"], x)
+        kk, vv = A.cross_kv(pl["cross"], enc_out,
+                            num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim)
+        x = x + A.cross_attn_apply(pl["cross"], h, kk, vv,
+                                   num_heads=cfg.num_heads,
+                                   num_kv_heads=cfg.num_kv_heads,
+                                   head_dim=cfg.resolved_head_dim,
+                                   differentiable=not collect_cache)
+        x = x + L.mlp_apply(pl["mlp"], L.layernorm(pl["ln2"], x),
+                            act="gelu", gated=False)
+        return x, ((k, v), (kk, vv)) if collect_cache else (x, 0.0)[1]
+
+    lbody = jax.checkpoint(body) if remat else body
+    x, caches = jax.lax.scan(lbody, x, params["dec"])
+    x = L.layernorm(params["ln_f"], x)
+    if return_hidden:
+        return x, caches if collect_cache else None
+    logits = constrain(L.unembed(params["embed"], x), "batch", None, "vocab")
+    return logits, caches if collect_cache else None
+
+
+def encdec_init_cache(cfg: ModelCfg, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    kd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, kd), dt),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, kd), dt),
+        "xk": jnp.zeros((cfg.num_layers, batch, cfg.num_audio_frames,
+                         cfg.num_kv_heads, kd), dt),
+        "xv": jnp.zeros((cfg.num_layers, batch, cfg.num_audio_frames,
+                         cfg.num_kv_heads, kd), dt),
+    }
+
+
+def encdec_prefill(params, cfg: ModelCfg, tokens, frames, max_len: int):
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    logits, caches = decode_train(params, cfg, tokens, enc_out,
+                                  collect_cache=True)
+    (k, v), (xk, xv) = caches
+    pad = max_len - S
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "xk": xk, "xv": xv,
+    }
+    return logits[:, -1], cache
+
+
+def encdec_decode_step(params, cfg: ModelCfg, token, cache, pos):
+    B = token.shape[0]
+    posv = jnp.asarray(pos, jnp.int32)
+    x = params["embed"][token][:, None, :] + params["pos_dec"][posv][None, None]
+
+    def body(x, xs):
+        pl, k_l, v_l, xk_l, xv_l = xs
+        h = L.layernorm(pl["ln1"], x)
+        q = (h @ pl["self"]["wq"] + pl["self"]["bq"]).reshape(
+            B, 1, cfg.num_heads, cfg.resolved_head_dim)
+        k = (h @ pl["self"]["wk"] + pl["self"]["bk"]).reshape(
+            B, 1, cfg.num_kv_heads, cfg.resolved_head_dim)
+        v = (h @ pl["self"]["wv"] + pl["self"]["bv"]).reshape(
+            B, 1, cfg.num_kv_heads, cfg.resolved_head_dim)
+        k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k.astype(k_l.dtype),
+                                                  pos, axis=1)
+        v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v.astype(v_l.dtype),
+                                                  pos, axis=1)
+        attn = A.decode_attention(q[:, 0], k_l, v_l, pos)
+        x = x + attn.reshape(B, 1, -1) @ pl["self"]["wo"]
+        h = L.layernorm(pl["ln_x"], x)
+        x = x + A.cross_attn_apply(pl["cross"], h, xk_l, xv_l,
+                                   num_heads=cfg.num_heads,
+                                   num_kv_heads=cfg.num_kv_heads,
+                                   head_dim=cfg.resolved_head_dim)
+        x = x + L.mlp_apply(pl["mlp"], L.layernorm(pl["ln2"], x),
+                            act="gelu", gated=False)
+        return x, (k_l, v_l)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.layernorm(params["ln_f"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits[:, 0], dict(cache, k=k, v=v)

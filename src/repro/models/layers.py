@@ -1,0 +1,94 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+every apply function is pure. Compute dtype is bf16 by default with f32 norms
+and f32 logits, matching production LM practice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+def rope_freqs(head_dim: int, theta) -> jnp.ndarray:
+    """Inverse frequencies; theta may be a traced scalar (per-layer pattern)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / jnp.power(theta, exponents)                     # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv         # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP ----
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x: jnp.ndarray, act: str = "silu",
+              gated: bool = True) -> jnp.ndarray:
+    from repro.models.sharding import constrain
+    up = x @ params["w_up"]
+    if gated:
+        gate = x @ params["w_gate"]
+        h = jax.nn.silu(gate) * up if act == "silu" else jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    h = constrain(h, "batch", None, "model")
+    return h @ params["w_down"]
+
+
+def unembed(embed: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding -> f32 logits."""
+    return (x.astype(jnp.float32) @ embed.astype(jnp.float32).T)

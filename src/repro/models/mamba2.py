@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) block, TPU-adapted.
+
+Training/prefill uses the chunked State-Space-Dual algorithm: the sequence is
+split into chunks of length C; within a chunk the recurrence is computed as a
+masked (attention-like) matmul — MXU work — and states are passed between
+chunks with a lax.scan (S/C serial steps instead of S). This is the TPU-native
+re-think of the CUDA selective-scan kernel: we trade the GPU's in-register
+sequential scan for systolic-array matmuls + a short scan, which is how the
+memory hierarchy (HBM->VMEM->MXU) wants it.
+
+Decode is the O(1) recurrence h <- a h + dt * B x per step, plus a rolling
+causal-conv window.
+
+Shapes: d_inner = expand * d_model, heads = d_inner / head_dim (P = head_dim),
+scalar decay per head (A), B/C shared across heads (ngroups = 1), state N.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models import layers as L
+
+
+class Mamba2State(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N) SSM state
+    conv: jnp.ndarray     # (B, d_conv-1, conv_dim) rolling conv input window
+
+
+def _dims(d_model: int, cfg: SSMCfg):
+    d_inner = cfg.expand * d_model
+    heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.d_state    # x, B, C all pass the conv
+    return d_inner, heads, conv_dim
+
+
+def mamba2_init(key, d_model: int, cfg: SSMCfg, dtype):
+    d_inner, heads, conv_dim = _dims(d_model, cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z (gate), x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * cfg.d_state + heads
+    return {
+        "w_in": L.dense_init(ks[0], d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((heads,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "w_out": L.dense_init(ks[2], d_inner, d_model, dtype),
+        "norm": L.rmsnorm_init(d_inner),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, heads):
+    z, xBC_dt = jnp.split(proj, [d_inner], axis=-1)
+    xBC, dt = jnp.split(xBC_dt, [d_inner + 2 * d_state], axis=-1)
+    return z, xBC, dt                                     # dt: (..., heads)
+
+
+def _causal_conv(xBC, w, b):
+    """xBC: (B, S, conv_dim); depthwise causal conv, kernel K."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_apply(params, x, cfg: SSMCfg, *, return_state: bool = False):
+    """x: (B, S, d) -> y (B, S, d) [, final Mamba2State]."""
+    B, S, d_model = x.shape
+    d_inner, heads, conv_dim = _dims(d_model, cfg)
+    N, P, C = cfg.d_state, cfg.head_dim, min(cfg.chunk, S)
+
+    proj = x @ params["w_in"]
+    z, xBC, dt = _split_proj(proj, d_inner, N, heads)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                      # (H,)
+    xh = xs.reshape(B, S, heads, P).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)                                        # (B,S,N)
+    Cm = Cm.astype(jnp.float32)
+
+    pad = (-S) % C
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // C
+
+    # chunked layout: (nc, B, C, ...)
+    xc = xh.reshape(B, nc, C, heads, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.reshape(B, nc, C, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B, nc, C, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nc, C, heads).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        xk, Bk, Ck, dtk = inp          # (B,C,H,P), (B,C,N), (B,C,N), (B,C,H)
+        la = dtk * A                   # log decay per step (B,C,H)
+        cum = jnp.cumsum(la, axis=1)   # (B,C,H)
+        # intra-chunk: M[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s, s <= t
+        gram = jnp.einsum("btn,bsn->bts", Ck, Bk)                  # (B,C,C)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,C,C,H)
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        M = jnp.where(tri[None, :, :, None], gram[..., None] * decay, 0.0)
+        M = M * dtk[:, None, :, :]                                 # weight dt_s
+        y = jnp.einsum("btsh,bshp->bthp", M, xk)
+        # inter-chunk: contribution of incoming state
+        y = y + jnp.einsum("btn,bhnp,bth->bthp", Ck, h.transpose(0, 1, 3, 2),
+                           jnp.exp(cum))
+        # state update: h' = exp(sum la) h + sum_s exp(cum_C - cum_s) dt_s B_s x_s^T
+        tail = jnp.exp(cum[:, -1:, :] - cum)                       # (B,C,H)
+        dB = Bk[:, :, None, :] * (dtk * tail)[..., None]           # (B,C,H,N)
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h \
+            + jnp.einsum("bchn,bchp->bhpn", dB, xk)
+        return h_new, y
+
+    h0 = jnp.zeros((B, heads, P, N), jnp.float32)
+    h_final, yc = jax.lax.scan(chunk_step, h0, (xc, Bc, Cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, nc * C, heads, P)[:, :S]
+    y = y + xh[:, :S] * params["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = L.rmsnorm(params["norm"], y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    if return_state:
+        K = params["conv_w"].shape[0]
+        pre_conv = jnp.concatenate(
+            [jnp.zeros((B, max(K - 1 - S, 0), conv_dim), x.dtype),
+             _pre_conv_tail(x, params, d_inner, N, K, S)], axis=1)
+        return out, Mamba2State(h=h_final, conv=pre_conv)
+    return out
+
+
+def _pre_conv_tail(x, params, d_inner, N, K, S):
+    """Last K-1 pre-conv xBC inputs (for decode continuation)."""
+    proj = x[:, max(0, S - (K - 1)):, :] @ params["w_in"]
+    _, xBC, _ = _split_proj(proj, d_inner, N, params["dt_bias"].shape[0])
+    return xBC.astype(x.dtype)
+
+
+def mamba2_init_state(params, batch: int, d_model: int, cfg: SSMCfg, dtype):
+    d_inner, heads, conv_dim = _dims(d_model, cfg)
+    return Mamba2State(
+        h=jnp.zeros((batch, heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(params, x, state: Mamba2State, cfg: SSMCfg
+                  ) -> Tuple[jnp.ndarray, Mamba2State]:
+    """x: (B, 1, d) single-token step."""
+    B, _, d_model = x.shape
+    d_inner, heads, conv_dim = _dims(d_model, cfg)
+    N, P = cfg.d_state, cfg.head_dim
+    K = cfg.d_conv
+
+    proj = x @ params["w_in"]                             # (B,1,*)
+    z, xBC, dt = _split_proj(proj, d_inner, N, heads)
+    window = jnp.concatenate([state.conv, xBC], axis=1)   # (B, K, conv_dim)
+    conv_out = jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"]
+    xBC1 = jax.nn.silu(conv_out)                          # (B, conv_dim)
+    xs, Bm, Cm = jnp.split(xBC1, [d_inner, d_inner + N], axis=-1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt1 * A)                                  # (B,H)
+    xh = xs.reshape(B, heads, P).astype(jnp.float32)
+    h = a[:, :, None, None] * state.h + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = L.rmsnorm(params["norm"], y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, Mamba2State(h=h, conv=window[:, 1:])

@@ -1,0 +1,192 @@
+"""Unified Model interface: init / loss / prefill / decode for every family.
+
+``build_model(cfg)`` returns a ``Model`` whose members are pure functions —
+the launcher jits/shards them; tests call them eagerly. Batches are dicts:
+
+  {"tokens": (B, S) int32}                              LM families
+  {"tokens", "frames": (B, S_enc, d_model)}             audio (conv stub)
+  {"tokens", "image_embed": (B, N_img, d_model)}        vlm (patch stub)
+
+Loss is next-token cross entropy (decoder tokens for enc-dec) + MoE aux.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import encdec as ED
+from repro.models import recurrent as R
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelCfg
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., Any]            # (params, batch, remat=) -> (loss, metrics)
+    prefill: Callable[..., Any]         # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable[..., Any]     # (params, token, cache, pos, batch=) -> (logits, cache)
+    init_cache: Callable[..., Any]      # (batch_size, max_len) -> cache
+
+
+def _xent(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token CE on explicit logits (small-vocab / test path)."""
+    from repro.models.sharding import constrain
+    logits = constrain(logits.astype(jnp.float32), "batch", None, "vocab")
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1]
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    onehot = constrain(onehot, "batch", None, "vocab")
+    target_logit = jnp.einsum("bsv,bsv->bs", lg, onehot)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    return jnp.mean(lse - target_logit)
+
+
+def fused_xent(x: jnp.ndarray, tokens: jnp.ndarray, head: jnp.ndarray,
+               chunk: int = 256) -> jnp.ndarray:
+    """Fused unembed + next-token CE, chunked over the sequence.
+
+    ``x``: final hidden states (B, S, d); ``head``: (V, d) unembedding.
+    Logits exist only per (B, chunk, V) block, rematerialized in the
+    backward pass — the full (B, S, V) f32 tensor (4+ GB/chip on 256k-vocab
+    configs, the dominant live buffer in early dry-runs) never exists.
+    """
+    from repro.models.sharding import _rules, constrain
+    B, S, d = x.shape
+    rules = _rules()
+    if rules is not None and rules.get("vocab") is None:
+        # no mesh axis left for the vocab dim (pure-FSDP cells where batch
+        # occupies every axis): the chunked scan's remat re-gathers the
+        # FSDP-sharded head every chunk (measured: dominant collective), so
+        # one full (B_loc, S, V) logits block is cheaper here.
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        return _xent(logits, tokens)
+    # gather the unembedding ONCE (vs per chunk inside the scan)
+    head = constrain(head, None, "vocab")
+    xs = x[:, :-1]
+    targets = tokens[:, 1:]
+    n = S - 1
+    c = min(chunk, n)
+    pad = (-n) % c
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nc = (n + pad) // c
+    xs = xs.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    tg = targets.reshape(B, nc, c).transpose(1, 0, 2)
+    valid = (jnp.arange(nc * c) < n).reshape(nc, c)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, tc, vc = inp                               # (B,c,d),(B,c),(c,)
+        logits = jnp.einsum("bcd,vd->bcv", xc.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        logits = constrain(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)        # (B,c)
+        onehot = jax.nn.one_hot(tc, logits.shape[-1], dtype=jnp.float32)
+        onehot = constrain(onehot, "batch", None, "vocab")
+        tl = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return acc + jnp.sum((lse - tl) * vc[None, :]), 0
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, tg, valid))
+    return acc / (B * n)
+
+
+def build_model(cfg: ModelCfg) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def init(key):
+            return T.transformer_init(key, cfg)
+
+        def loss(params, batch, remat: bool = True):
+            x, aux, _ = T.transformer_forward(
+                params, cfg, batch["tokens"],
+                image_embed=batch.get("image_embed"), remat=remat,
+                return_hidden=True)
+            l = fused_xent(x, batch["tokens"], T.head_matrix(params, cfg))
+            l = l + 0.01 * aux
+            return l, {"xent": l, "moe_aux": aux}
+
+        def prefill(params, batch, max_len):
+            return T.transformer_prefill(params, cfg, batch["tokens"], max_len,
+                                         image_embed=batch.get("image_embed"))
+
+        def decode_step(params, token, cache, pos, batch=None):
+            img = None if batch is None else batch.get("image_embed")
+            return T.transformer_decode_step(params, cfg, token, cache, pos,
+                                             image_embed=img)
+
+        def init_cache(batch_size, max_len):
+            return T.init_kv_cache(cfg, batch_size, max_len)
+
+    elif fam == "ssm":   # xLSTM
+        def init(key):
+            return R.xlstm_init(key, cfg)
+
+        def loss(params, batch, remat: bool = True):
+            x, _ = R.xlstm_forward(params, cfg, batch["tokens"], remat=remat,
+                                   return_hidden=True)
+            l = fused_xent(x, batch["tokens"], R.head_matrix(params, cfg))
+            return l, {"xent": l}
+
+        def prefill(params, batch, max_len):
+            return R.xlstm_prefill(params, cfg, batch["tokens"], max_len)
+
+        def decode_step(params, token, cache, pos, batch=None):
+            return R.xlstm_decode_step(params, cfg, token, cache, pos)
+
+        def init_cache(batch_size, max_len):
+            return R.xlstm_init_cache(cfg, batch_size)
+
+    elif fam == "hybrid":  # zamba2
+        def init(key):
+            return R.hybrid_init(key, cfg)
+
+        def loss(params, batch, remat: bool = True):
+            x, _ = R.hybrid_forward(params, cfg, batch["tokens"], remat=remat,
+                                    return_hidden=True)
+            l = fused_xent(x, batch["tokens"], R.head_matrix(params, cfg))
+            return l, {"xent": l}
+
+        def prefill(params, batch, max_len):
+            return R.hybrid_prefill(params, cfg, batch["tokens"], max_len)
+
+        def decode_step(params, token, cache, pos, batch=None):
+            return R.hybrid_decode_step(params, cfg, token, cache, pos)
+
+        def init_cache(batch_size, max_len):
+            return R.hybrid_init_cache(cfg, batch_size, max_len)
+
+    elif fam == "audio":  # whisper
+        def init(key):
+            return ED.encdec_init(key, cfg)
+
+        def loss(params, batch, remat: bool = True):
+            enc_out = ED.encode(params, cfg, batch["frames"],
+                                differentiable=True)
+            x, _ = ED.decode_train(params, cfg, batch["tokens"], enc_out,
+                                   remat=remat, return_hidden=True)
+            l = fused_xent(x, batch["tokens"], params["embed"])
+            return l, {"xent": l}
+
+        def prefill(params, batch, max_len):
+            return ED.encdec_prefill(params, cfg, batch["tokens"],
+                                     batch["frames"], max_len)
+
+        def decode_step(params, token, cache, pos, batch=None):
+            return ED.encdec_decode_step(params, cfg, token, cache, pos)
+
+        def init_cache(batch_size, max_len):
+            return ED.encdec_init_cache(cfg, batch_size, max_len)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, init_cache=init_cache)

@@ -1,0 +1,94 @@
+"""Top-k routed Mixture-of-Experts with capacity-bounded einsum dispatch.
+
+Dispatch is the Mesh-TF/Switch pattern (one-hot dispatch/combine tensors) so it
+shards cleanly: the expert axis is a *logical* axis ("expert") that the
+launcher maps to the mesh's model axis when num_experts divides it (EP), or
+leaves replicated with the expert FFN hidden dim tensor-parallel instead (TP).
+
+To bound the (tokens, E, C) dispatch tensor, tokens are processed in groups of
+``group`` with a lax.scan — capacity is per-group, which also matches how
+production routers bound hot-expert skew. An auxiliary load-balancing loss
+(Switch style) is returned alongside.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+def moe_init(key, d_model: int, cfg: MoECfg, d_ff_dense: int, dtype):
+    d_e = cfg.d_expert or d_ff_dense
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], d_model, cfg.num_experts, jnp.float32),
+        "w_gate": _stack_init(ks[1], cfg.num_experts, d_model, d_e, dtype),
+        "w_up": _stack_init(ks[2], cfg.num_experts, d_model, d_e, dtype),
+        "w_down": _stack_init(ks[3], cfg.num_experts, d_e, d_model, dtype),
+    }
+    if cfg.num_shared:
+        p["shared"] = L.mlp_init(ks[4], d_model, d_e * cfg.num_shared, dtype)
+    return p
+
+
+def _stack_init(key, e, d_in, d_out, dtype):
+    std = 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (e, d_in, d_out)) * std).astype(dtype)
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: MoECfg, *,
+              group: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    g = min(group, S)
+    pad = (-S) % g
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    ng = xp.shape[1] // g
+    cap = max(1, int(cfg.capacity_factor * g * K / E))
+
+    xg = xp.reshape(B, ng, g, d).transpose(1, 0, 2, 3)      # (ng, B, g, d)
+
+    def one_group(carry, xt):                                # xt: (B, g, d)
+        logits = (xt.astype(jnp.float32) @ params["router"])  # (B, g, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)         # (B, g, K)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+        onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B, g, K, E)
+        # position of each (token, k) slot in its expert queue (k-major order)
+        flat = onehot.reshape(B, g * K, E)
+        pos = jnp.cumsum(flat, axis=1) - flat                 # (B, g*K, E)
+        pos = pos.reshape(B, g, K, E)
+        keep = (pos < cap) * onehot
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        # dispatch / combine: (B, g, E, C)
+        dispatch = jnp.einsum("bgke,bgkec->bgec", keep, pos_oh * onehot[..., None])
+        combine = jnp.einsum("bgke,bgkec->bgec",
+                             keep * gate_vals[..., None], pos_oh * onehot[..., None])
+
+        ein = jnp.einsum("bgec,bgd->becd", dispatch, xt.astype(jnp.float32))
+        ein = constrain(ein.astype(xt.dtype), "batch", "expert", None, None)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", ein, params["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", ein, params["w_up"])
+        out_e = jnp.einsum("becf,efd->becd", h, params["w_down"])
+        out_e = constrain(out_e, "batch", "expert", None, None)
+        y = jnp.einsum("bgec,becd->bgd", combine, out_e.astype(jnp.float32))
+
+        # Switch aux loss: fraction routed * mean router prob, per expert
+        frac = jnp.mean(onehot[..., 0:K, :].sum(2), axis=1)   # (B, E)
+        imp = jnp.mean(probs, axis=1)                         # (B, E)
+        aux = E * jnp.mean(jnp.sum(frac * imp, axis=-1))
+        return carry + aux, y.astype(xt.dtype)
+
+    aux, yg = jax.lax.scan(one_group, jnp.zeros((), jnp.float32), xg)
+    y = yg.transpose(1, 0, 2, 3).reshape(B, ng * g, d)[:, :S]
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], x)
+    return y, aux / ng

@@ -1,0 +1,47 @@
+"""Logical-axis sharding annotations for model code.
+
+Model code annotates activations with *logical* axes ("batch", "seq", "model",
+"ff", ...). The launcher installs a logical->mesh mapping (e.g. batch ->
+("pod", "data")); outside any mapping the annotations are no-ops so unit tests
+and CPU smoke tests never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: dict[str, Axis]):
+    """Install logical->mesh axis mapping, e.g. {"batch": ("pod", "data"),
+    "model": "model"}. Unknown logical names map to None (replicated)."""
+    prev = _rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve(*logical: Optional[str]) -> P:
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in logical])
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the installed rules; no-op otherwise."""
+    if _rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve(*logical))

@@ -1,0 +1,351 @@
+"""Decoder-only transformer assembly (dense / MoE / MLA / VLM families).
+
+Layers are *scanned*: parameters for homogeneous layer stacks are stored with a
+leading layer axis and the forward pass is a lax.scan over that axis, so HLO
+size (and compile time) is independent of depth — essential for 62-layer
+configs compiled for 512 devices on one CPU. Per-layer heterogeneity
+(gemma3's 5:1 local:global window pattern, per-layer rope theta) rides along
+as scanned *data* (arrays of windows/thetas), not as structure.
+
+VLM (llama-3.2-vision style): layers are grouped; each group is
+(cross_attn_every - 1) self-attn layers + 1 cross-attn layer, scanned over
+groups with an inner scan over the self layers.
+
+Caches: pytrees with a leading layer axis; decode scans over layers carrying
+the token activation and threading per-layer cache slices as scan xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.sharding import constrain
+
+
+def _dtype(cfg: ModelCfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------------ init ---
+
+def _layer_init(key, cfg: ModelCfg):
+    """One decoder layer's params."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model),
+                         "ln2": L.rmsnorm_init(cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = MLA.mla_init(ks[0], cfg.d_model, cfg.num_heads, cfg.mla, dt)
+    else:
+        p["attn"] = A.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.resolved_head_dim, dt,
+                                qkv_bias=cfg.qkv_bias)
+    if cfg.moe is not None:
+        p["ffn"] = MOE.moe_init(ks[1], cfg.d_model, cfg.moe, cfg.d_ff, dt)
+    else:
+        p["ffn"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt,
+                              gated=cfg.gated_mlp)
+    return p
+
+
+def _cross_layer_init(key, cfg: ModelCfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "attn": A.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.resolved_head_dim, dt),
+        "ffn": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, gated=cfg.gated_mlp),
+        "gate": jnp.zeros((), jnp.float32),   # zero-init cross-attn gate
+    }
+
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def transformer_init(key, cfg: ModelCfg):
+    dt = _dtype(cfg)
+    k_embed, k_layers, k_cross, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        groups = cfg.num_layers // per
+        params["groups"] = {
+            "self": _stacked(
+                lambda k: _stacked(lambda kk: _layer_init(kk, cfg), k, per - 1),
+                k_layers, groups),
+            "cross": _stacked(lambda k: _cross_layer_init(k, cfg),
+                              k_cross, groups),
+        }
+        params["img_proj"] = L.dense_init(k_head, cfg.d_model, cfg.d_model, dt)
+    else:
+        params["layers"] = _stacked(lambda k: _layer_init(k, cfg),
+                                    k_layers, cfg.num_layers)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# --------------------------------------------------------------- forward ---
+
+def _ffn_apply(p_ffn, cfg: ModelCfg, h):
+    if cfg.moe is not None:
+        y, aux = MOE.moe_apply(p_ffn, h, cfg.moe)
+        return y, aux
+    return L.mlp_apply(p_ffn, h, act=cfg.act, gated=cfg.gated_mlp), 0.0
+
+
+def _self_layer(p, cfg: ModelCfg, x, window, theta, q_offset: int = 0,
+                differentiable: bool = False):
+    """Returns (x_out, aux, kv) — kv is the prefill cache contribution."""
+    h = L.rmsnorm(p["ln1"], x)
+    if cfg.mla is not None:
+        attn_out, kv = MLA.mla_prefill(p["attn"], h, num_heads=cfg.num_heads,
+                                       cfg=cfg.mla, theta=theta,
+                                       q_offset=q_offset,
+                                       differentiable=differentiable)
+    else:
+        attn_out, kv = A.self_attn_apply(
+            p["attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            theta=theta, window=window, q_offset=q_offset,
+            differentiable=differentiable)
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x)
+    ffn_out, aux = _ffn_apply(p["ffn"], cfg, h)
+    x = constrain(x + ffn_out, "batch", "seq", None)
+    return x, aux, kv
+
+
+def _cross_layer(p, cfg: ModelCfg, x, kv_k, kv_v, differentiable: bool = False):
+    h = L.rmsnorm(p["ln1"], x)
+    attn_out = A.cross_attn_apply(p["attn"], h, kv_k, kv_v,
+                                  num_heads=cfg.num_heads,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=cfg.resolved_head_dim,
+                                  differentiable=differentiable)
+    x = x + (jnp.tanh(p["gate"]).astype(attn_out.dtype) * attn_out)
+    h = L.rmsnorm(p["ln2"], x)
+    ffn_out, _ = _ffn_apply(p["ffn"], cfg, h)
+    return x + ffn_out
+
+
+def transformer_forward(params, cfg: ModelCfg, tokens: jnp.ndarray,
+                        image_embed: Optional[jnp.ndarray] = None,
+                        remat: bool = False,
+                        collect_cache: bool = False,
+                        return_hidden: bool = False):
+    """tokens: (B, S) -> (logits (B,S,V) f32, aux, cache|None).
+    ``return_hidden``: skip the unembedding and return the final normed
+    hidden states instead (the fused-CE loss path computes logits in chunks
+    so the full (B,S,V) tensor is never materialized)."""
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", "seq", None)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.layer_thetas(), jnp.float32)
+    diff = not collect_cache   # training path must be reverse-differentiable
+
+    if cfg.cross_attn_every:
+        img = image_embed @ params["img_proj"]
+
+        def group_body(x, g):
+            p_self, p_cross = g
+
+            def self_body(x, pl):
+                y, aux, kv = _self_layer(pl, cfg, x, 0, cfg.rope_theta,
+                                         differentiable=diff)
+                return y, (aux, kv)
+            body = jax.checkpoint(self_body) if remat else self_body
+            x, (auxs, kvs) = jax.lax.scan(body, x, p_self)
+            kk, vv = A.cross_kv(p_cross["attn"], img,
+                                num_kv_heads=cfg.num_kv_heads,
+                                head_dim=cfg.resolved_head_dim)
+            x = _cross_layer(p_cross, cfg, x, kk, vv, differentiable=diff)
+            return x, (jnp.sum(auxs), kvs, (kk, vv))
+
+        gbody = jax.checkpoint(group_body) if remat else group_body
+        x, (auxs, kvs, xkvs) = jax.lax.scan(
+            gbody, x, (params["groups"]["self"], params["groups"]["cross"]))
+        aux = jnp.sum(auxs)
+        cache = (kvs, xkvs) if collect_cache else None
+    else:
+        def body(x, xs):
+            pl, w, th = xs
+            y, aux, kv = _self_layer(pl, cfg, x, w, th, differentiable=diff)
+            return y, (aux, kv)
+
+        lbody = jax.checkpoint(body) if remat else body
+        x, (auxs, kvs) = jax.lax.scan(lbody, x, (params["layers"], windows, thetas))
+        aux = jnp.sum(auxs)
+        cache = kvs if collect_cache else None
+
+    x = L.rmsnorm(params["ln_f"], x)
+    if return_hidden:
+        return x, aux, cache
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux, cache
+
+
+def head_matrix(params, cfg: ModelCfg):
+    """(V, d) unembedding matrix (tied or separate) for the fused CE."""
+    if cfg.tie_embeddings:
+        return params["embed"]
+    return params["lm_head"].T
+
+
+# ----------------------------------------------------------------- cache ---
+
+def init_kv_cache(cfg: ModelCfg, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((cfg.num_layers, batch, max_len, m.kv_lora_rank), dt),
+            "krope": jnp.zeros((cfg.num_layers, batch, max_len, m.rope_head_dim), dt),
+        }
+    kd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, kd)
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        groups = cfg.num_layers // per
+        cache = {
+            "k": jnp.zeros((groups, per - 1, batch, max_len, cfg.num_kv_heads, kd), dt),
+            "v": jnp.zeros((groups, per - 1, batch, max_len, cfg.num_kv_heads, kd), dt),
+            "xk": jnp.zeros((groups, batch, cfg.num_image_tokens,
+                             cfg.num_kv_heads, kd), dt),
+            "xv": jnp.zeros((groups, batch, cfg.num_image_tokens,
+                             cfg.num_kv_heads, kd), dt),
+        }
+    return cache
+
+
+def transformer_prefill(params, cfg: ModelCfg, tokens: jnp.ndarray,
+                        max_len: int,
+                        image_embed: Optional[jnp.ndarray] = None):
+    """Run the full prompt, return (last-position logits, cache at max_len).
+    Only the last position is unembedded (V x d matmul on (B, 1) instead of
+    (B, S) — a 32768x flop/memory saving on the 32k prefill cells)."""
+    B, S = tokens.shape
+    x, _, kvs = transformer_forward(params, cfg, tokens,
+                                    image_embed=image_embed,
+                                    collect_cache=True, return_hidden=True)
+    x_last = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x_last)
+    else:
+        logits = (x_last @ params["lm_head"]).astype(jnp.float32)
+    pad = max_len - S
+    if cfg.cross_attn_every:
+        (k, v), (xk, xv) = kvs
+        # k/v: (groups, per-1, B, S, KV, Dh) stacked by the nested scans
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "xk": xk, "xv": xv,
+        }
+        return logits[:, 0], cache
+    if cfg.mla is not None:
+        ckv, krope = kvs
+        cache = {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            "krope": jnp.pad(krope, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        }
+    else:
+        k, v = kvs
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    return logits[:, 0], cache
+
+
+def transformer_decode_step(params, cfg: ModelCfg, token: jnp.ndarray,
+                            cache, pos,
+                            image_embed: Optional[jnp.ndarray] = None):
+    """token: (B,) int32; pos: scalar int32 position to write. Returns
+    (logits (B, V) f32, new cache)."""
+    x = params["embed"][token][:, None, :]               # (B, 1, d)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.layer_thetas(), jnp.float32)
+
+    if cfg.cross_attn_every:
+        def group_body(x, g):
+            (p_self, p_cross, ck, cv, xk, xv) = g
+
+            def self_body(x, xs):
+                pl, k_l, v_l = xs
+                h = L.rmsnorm(pl["ln1"], x)
+                attn_out, k_n, v_n = A.self_attn_decode(
+                    pl["attn"], h, k_l, v_l, pos, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, theta=cfg.rope_theta)
+                x = x + attn_out
+                h = L.rmsnorm(pl["ln2"], x)
+                ffn_out, _ = _ffn_apply(pl["ffn"], cfg, h)
+                return x + ffn_out, (k_n, v_n)
+
+            x, (k_new, v_new) = jax.lax.scan(self_body, x, (p_self, ck, cv))
+            x = _cross_layer(p_cross, cfg, x, xk, xv)   # cached cross K/V
+            return x, (k_new, v_new)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            group_body, x,
+            (params["groups"]["self"], params["groups"]["cross"],
+             cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        cache = dict(cache, k=k_new, v=v_new)
+    elif cfg.mla is not None:
+        def body(x, xs):
+            pl, ckv_l, krope_l = xs
+            h = L.rmsnorm(pl["ln1"], x)
+            attn_out, ckv_n, krope_n = MLA.mla_decode(
+                pl["attn"], h, ckv_l, krope_l, pos,
+                num_heads=cfg.num_heads, cfg=cfg.mla, theta=cfg.rope_theta)
+            x = x + attn_out
+            h = L.rmsnorm(pl["ln2"], x)
+            ffn_out, _ = _ffn_apply(pl["ffn"], cfg, h)
+            return x + ffn_out, (ckv_n, krope_n)
+
+        x, (ckv, krope) = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["krope"]))
+        cache = {"ckv": ckv, "krope": krope}
+    else:
+        def body(x, xs):
+            pl, w, th, k_l, v_l = xs
+            h = L.rmsnorm(pl["ln1"], x)
+            attn_out, k_n, v_n = A.self_attn_decode(
+                pl["attn"], h, k_l, v_l, pos, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+                theta=th, window=w)
+            x = x + attn_out
+            h = L.rmsnorm(pl["ln2"], x)
+            ffn_out, _ = _ffn_apply(pl["ffn"], cfg, h)
+            return x + ffn_out, (k_n, v_n)
+
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["layers"], windows, thetas, cache["k"], cache["v"]))
+        cache = {"k": k, "v": v}
+
+    x = L.rmsnorm(params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits[:, 0], cache

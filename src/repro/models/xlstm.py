@@ -1,0 +1,265 @@
+"""xLSTM blocks (mLSTM + sLSTM), TPU-adapted.
+
+mLSTM (matrix memory, exponential gating) admits a parallel quadratic form
+structurally identical to attention with a data-dependent decay matrix
+``D[t,s] = exp(cumf_t - cumf_s + i_s)``. We implement it blockwise with the
+same online-max rescaling trick as flash attention (fori over KV blocks, scan
+over query blocks), so 32k prefill never materializes S x S. Decode is the
+O(P^2) recurrence on the (P x P) matrix state.
+
+sLSTM is *intrinsically serial* (hidden-state -> gate recurrence, per-head
+block-diagonal R). There is no parallel form — this is the architecture's own
+property, not a porting artifact — so training runs a lax.scan over time. The
+1.3b config uses mLSTM:sLSTM = 7:1, so the serial fraction is small.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# =============================== mLSTM =====================================
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray   # (B, H, P, P) matrix memory
+    n: jnp.ndarray   # (B, H, P) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+def mlstm_init(key, d_model: int, num_heads: int, dtype, pf: float = 2.0):
+    d_inner = int(pf * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": L.dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "w_q": L.dense_init(ks[1], d_inner, d_inner, dtype),
+        "w_k": L.dense_init(ks[2], d_inner, d_inner, dtype),
+        "w_v": L.dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_i": L.dense_init(ks[4], d_inner, num_heads, jnp.float32),
+        "w_f": L.dense_init(ks[5], d_inner, num_heads, jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),   # open forget gates
+        "w_down": L.dense_init(ks[6], d_inner, d_model, dtype),
+        "norm": L.rmsnorm_init(d_inner),
+    }
+
+
+def _mlstm_qkvif(params, x, num_heads):
+    B, S, _ = x.shape
+    up = x @ params["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)                    # inner stream + gate
+    d_inner = xi.shape[-1]
+    P = d_inner // num_heads
+    q = (xi @ params["w_q"]).reshape(B, S, num_heads, P)
+    k = (xi @ params["w_k"]).reshape(B, S, num_heads, P) / math.sqrt(P)
+    v = (xi @ params["w_v"]).reshape(B, S, num_heads, P)
+    it = xi.astype(jnp.float32) @ params["w_i"] + params["b_i"]   # (B,S,H)
+    ft = xi.astype(jnp.float32) @ params["w_f"] + params["b_f"]
+    return q, k, v, it, ft, z, d_inner, P
+
+
+def _mlstm_parallel(q, k, v, it, ft, *, block_q: int = 256, block_kv: int = 512):
+    """Blockwise stabilized quadratic mLSTM. q,k,v: (B,S,H,P); it,ft: (B,S,H)."""
+    B, S, H, P = q.shape
+    logf = jax.nn.log_sigmoid(ft)                        # (B,S,H)
+    cum = jnp.cumsum(logf, axis=1)                       # inclusive cumsum
+    # weight for pair (t, s): exp(cum_t - cum_s + i_s), s <= t
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    pq, pkv = (-S) % bq, (-S) % bkv
+    qf = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pq), (0, 0), (0, 0)))
+    cumq = jnp.pad(cum, ((0, 0), (0, pq), (0, 0)))
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    cumk = jnp.pad(cum, ((0, 0), (0, pkv), (0, 0)))
+    itp = jnp.pad(it, ((0, 0), (0, pkv), (0, 0)), constant_values=NEG_INF)
+    nq, nkv = (S + pq) // bq, (S + pkv) // bkv
+
+    qb = qf.reshape(B, nq, bq, H, P).transpose(1, 0, 2, 3, 4)
+    cumqb = cumq.reshape(B, nq, bq, H).transpose(1, 0, 2, 3)
+
+    def q_block(carry, inp):
+        qblk, cq, qi = inp                               # (B,bq,H,P), (B,bq,H)
+        q_start = qi * bq
+
+        def body(t, st):
+            m, num, den = st
+            kblk = jax.lax.dynamic_slice_in_dim(kf, t * bkv, bkv, 1)
+            vblk = jax.lax.dynamic_slice_in_dim(vf, t * bkv, bkv, 1)
+            ck = jax.lax.dynamic_slice_in_dim(cumk, t * bkv, bkv, 1)
+            ik = jax.lax.dynamic_slice_in_dim(itp, t * bkv, bkv, 1)
+            k_pos = t * bkv + jnp.arange(bkv)
+            q_pos = q_start + jnp.arange(bq)
+            causal = q_pos[:, None] >= k_pos[None, :]    # (bq,bkv)
+            # logD: (B,bq,bkv,H)
+            logD = cq[:, :, None, :] - ck[:, None, :, :] + ik[:, None, :, :]
+            logD = jnp.where(causal[None, :, :, None], logD, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logD, axis=2))          # (B,bq,H)
+            # explicit mask: fully-masked blocks (m_new == NEG_INF) must add 0
+            w = jnp.exp(logD - m_new[:, :, None, :]) \
+                * causal[None, :, :, None].astype(jnp.float32)
+            corr = jnp.exp(m - m_new)
+            qk = jnp.einsum("bqhp,bjhp->bqjh", qblk, kblk)         # (B,bq,bkv,H)
+            wqk = w * qk
+            num_new = num * corr[..., None] + jnp.einsum(
+                "bqjh,bjhp->bqhp", wqk, vblk)
+            den_new = den * corr + jnp.sum(wqk, axis=2)
+            return m_new, num_new, den_new
+
+        m0 = jnp.full((B, bq, H), NEG_INF, jnp.float32)
+        n0 = jnp.zeros((B, bq, H, P), jnp.float32)
+        d0 = jnp.zeros((B, bq, H), jnp.float32)
+        # full-range masked scan: reverse-mode differentiable and visible to
+        # the HLO loop-cost accounting (static trip count)
+        (m, num, den), _ = jax.lax.scan(
+            lambda st, t: (body(t, st), 0), (m0, n0, d0), jnp.arange(nkv))
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        return carry, y
+
+    _, ys = jax.lax.scan(q_block, 0, (qb, cumqb, jnp.arange(nq)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, P)[:, :S]
+    return y
+
+
+def mlstm_apply(params, x, num_heads: int, return_state: bool = False):
+    B, S, d_model = x.shape
+    q, k, v, it, ft, z, d_inner, P = _mlstm_qkvif(params, x, num_heads)
+    y = _mlstm_parallel(q, k, v, it, ft)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = y @ params["w_down"]
+    if not return_state:
+        return out
+    # closed-form final state: C_S = sum_s exp(cum_S - cum_s + i_s - m) v_s k_s^T
+    logf = jax.nn.log_sigmoid(ft)
+    cum = jnp.cumsum(logf, axis=1)                        # (B,S,H)
+    logw = cum[:, -1:, :] - cum + it                      # (B,S,H)
+    m_fin = jnp.max(logw, axis=1)                         # (B,H)
+    w = jnp.exp(logw - m_fin[:, None, :])                 # (B,S,H)
+    C = jnp.einsum("bsh,bshp,bshq->bhpq", w, v.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshq->bhq", w, k.astype(jnp.float32))
+    return out, MLSTMState(C=C, n=n, m=m_fin)
+
+
+def mlstm_init_state(batch, d_model, num_heads, pf: float = 2.0):
+    d_inner = int(pf * d_model)
+    P = d_inner // num_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, num_heads, P, P), jnp.float32),
+        n=jnp.zeros((batch, num_heads, P), jnp.float32),
+        m=jnp.full((batch, num_heads), NEG_INF, jnp.float32),
+    )
+
+
+def mlstm_decode(params, x, state: MLSTMState, num_heads: int
+                 ) -> Tuple[jnp.ndarray, MLSTMState]:
+    """x: (B, 1, d)."""
+    B, _, d_model = x.shape
+    q, k, v, it, ft, z, d_inner, P = _mlstm_qkvif(params, x, num_heads)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]               # (B,H,P)
+    i1, f1 = it[:, 0], ft[:, 0]                          # (B,H)
+    logf = jax.nn.log_sigmoid(f1)
+    m_new = jnp.maximum(state.m + logf, i1)
+    a = jnp.exp(state.m + logf - m_new)                  # decay of old state
+    b = jnp.exp(i1 - m_new)                              # write strength
+    C = a[..., None, None] * state.C + b[..., None, None] * jnp.einsum(
+        "bhp,bhq->bhpq", v1.astype(jnp.float32), k1.astype(jnp.float32))
+    n = a[..., None] * state.n + b[..., None] * k1.astype(jnp.float32)
+    num = jnp.einsum("bhpq,bhq->bhp", C, q1.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, q1.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return y @ params["w_down"], MLSTMState(C=C, n=n, m=m_new)
+
+
+# =============================== sLSTM =====================================
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, d_inner)
+    n: jnp.ndarray   # (B, d_inner)
+    h: jnp.ndarray   # (B, d_inner)
+    m: jnp.ndarray   # (B, d_inner)
+
+
+def slstm_init(key, d_model: int, num_heads: int, dtype, pf: float = 4.0 / 3.0):
+    d_inner = (int(pf * d_model) // num_heads) * num_heads
+    P = d_inner // num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L.dense_init(ks[0], d_model, 4 * d_inner, dtype),
+        # block-diagonal recurrent weights per head: h (P) -> gates (4P)
+        "R": (jax.random.normal(ks[1], (num_heads, P, 4 * P))
+              / math.sqrt(P)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d_inner,), jnp.float32),
+                              jnp.full((d_inner,), 3.0, jnp.float32),
+                              jnp.zeros((d_inner,), jnp.float32)]),
+        "w_down": L.dense_init(ks[2], d_inner, d_model, dtype),
+        "norm": L.rmsnorm_init(d_inner),
+    }
+
+
+def _slstm_cell(gates, st: SLSTMState, d_inner: int) -> SLSTMState:
+    zt, it, ft, ot = jnp.split(gates, 4, axis=-1)        # each (B, d_inner)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st.m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(logf + st.m - m_new)
+    c = f * st.c + i * jnp.tanh(zt)
+    n = jnp.maximum(f * st.n + i, 1.0)
+    h = jax.nn.sigmoid(ot) * c / n
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def _slstm_gates(params, xt, h_prev, num_heads, d_inner):
+    """xt: (B, 4*d_inner) pre-proj input; h_prev: (B, d_inner)."""
+    B = h_prev.shape[0]
+    P = d_inner // num_heads
+    hh = h_prev.reshape(B, num_heads, P)
+    rec = jnp.einsum("bhp,hpg->bhg", hh, params["R"]).reshape(B, num_heads, 4, P)
+    rec = rec.transpose(0, 2, 1, 3).reshape(B, 4 * d_inner)
+    return xt.astype(jnp.float32) + rec + params["b"]
+
+
+def slstm_apply(params, x, num_heads: int):
+    """Serial scan over time (no parallel form exists)."""
+    B, S, d_model = x.shape
+    d_inner4 = params["w_in"].shape[1]
+    d_inner = d_inner4 // 4
+    xin = (x @ params["w_in"]).astype(jnp.float32)        # (B,S,4*di)
+
+    def step(st, xt):
+        gates = _slstm_gates(params, xt, st.h, num_heads, d_inner)
+        st = _slstm_cell(gates, st, d_inner)
+        return st, st.h
+
+    st0 = SLSTMState(*[jnp.zeros((B, d_inner), jnp.float32) for _ in range(3)],
+                     m=jnp.full((B, d_inner), NEG_INF, jnp.float32))
+    _, hs = jax.lax.scan(step, st0, xin.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)             # (B,S,d_inner)
+    y = L.rmsnorm(params["norm"], y)
+    return y @ params["w_down"]
+
+
+def slstm_init_state(batch, d_model, num_heads, pf: float = 4.0 / 3.0):
+    d_inner = (int(pf * d_model) // num_heads) * num_heads
+    z = jnp.zeros((batch, d_inner), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z,
+                      m=jnp.full((batch, d_inner), NEG_INF, jnp.float32))
+
+
+def slstm_decode(params, x, state: SLSTMState, num_heads: int):
+    B, _, d_model = x.shape
+    d_inner = params["w_in"].shape[1] // 4
+    xt = (x[:, 0] @ params["w_in"]).astype(jnp.float32)
+    gates = _slstm_gates(params, xt, state.h, num_heads, d_inner)
+    st = _slstm_cell(gates, state, d_inner)
+    y = L.rmsnorm(params["norm"], st.h[:, None, :].astype(x.dtype))
+    return y @ params["w_down"], st

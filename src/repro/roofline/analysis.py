@@ -1,0 +1,210 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the post-optimization HLO text and sum the
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (all-reduce counted twice: reduce + broadcast
+phases on a ring). Per-chip bytes: GSPMD HLO shapes are already per-shard.
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (45 GB/s effective used for the collective term with 4
+links usable per chip in a 2D torus — we report the conservative 1-link
+number; the table notes both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 MXU per chip
+VPU_FLOPS = 2e12             # f32 elementwise (VPU) per chip, approx
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' or a tuple '(a, b, ...)' result string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: int
+    count_by_kind: dict
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by_kind = {k: 0 for k in _COLLECTIVES}
+    count_by_kind = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.:  %all-reduce.5 = bf16[1024,512]{1,0} all-reduce(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-"):
+                kind = k
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(shape_str)
+        # ring all-reduce moves ~2x the payload (reduce-scatter + all-gather)
+        if kind == "all-reduce":
+            b *= 2
+        bytes_by_kind[kind] += b
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind=bytes_by_kind,
+                           total_bytes=sum(bytes_by_kind.values()),
+                           count_by_kind=count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/flop figures are PER CHIP: ``compiled.cost_analysis()`` and
+    the HLO text both describe the post-GSPMD per-shard program (verified by
+    calibration against an analytic matmul — see EXPERIMENTS.md §Dry-run)."""
+    flops: float                 # per-chip HLO flops (dot + elementwise)
+    hbm_bytes: float             # per-chip bytes accessed
+    collective_bytes: float      # per-chip collective bytes
+    chips: int
+    model_flops: float = 0.0     # analytic 6*N*D (or 6*N_active*D), ALL chips
+    dot_flops: float = 0.0       # MXU-eligible portion
+    elem_flops: float = 0.0      # VPU portion
+
+    @property
+    def t_compute(self) -> float:
+        if self.dot_flops or self.elem_flops:
+            return self.dot_flops / PEAK_FLOPS + self.elem_flops / VPU_FLOPS
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap of compute, HBM and ICI)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def mfu(self) -> Optional[float]:
+        """Model-FLOPs utilization at the roofline-optimistic step time."""
+        if not self.model_flops:
+            return None
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / \
+            max(self.step_time, 1e-30)
+
+    def row(self) -> dict:
+        out = {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck, "step_time_s": self.step_time,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac, "mfu": self.mfu,
+        }
+        out["dot_flops"] = self.dot_flops
+        out["elem_flops"] = self.elem_flops
+        for k in ("traffic_upper", "xla_flops", "xla_bytes", "unknown_while"):
+            if hasattr(self, k):
+                out[k] = getattr(self, k)
+        return out
+
+
+def count_params(params_shape) -> int:
+    import jax
+    return sum(int(pyleaf.size) for pyleaf in jax.tree.leaves(params_shape))
+
+
+def model_flops_train(num_params: int, tokens: int,
+                      active_frac: float = 1.0) -> float:
+    """6*N*D for a train step (fwd+bwd)."""
+    return 6.0 * num_params * active_frac * tokens
+
+
+def model_flops_decode(num_params: int, batch: int,
+                       active_frac: float = 1.0) -> float:
+    """2*N per generated token (one fwd)."""
+    return 2.0 * num_params * active_frac * batch
+
+
+def from_compiled(compiled, *, chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None,
+                  while_hint: float = 1.0) -> Roofline:
+    """Build the roofline from the compiled artifact.
+
+    flops / collective bytes: loop-aware HLO cost model (hlo_cost) — XLA's
+    own cost_analysis() counts while bodies once, undercounting scanned
+    programs by their trip counts (verified empirically).
+
+    memory term: per-chip LIVE bytes (arguments + outputs + temps from
+    memory_analysis) — the bytes a perfectly-fused step streams at least
+    once. The instruction-granularity traffic estimate from the CPU-backend
+    HLO is kept as ``traffic_upper`` (CPU fuses far less than the TPU
+    backend would, so it overestimates; the truth lies between).
+    """
+    from repro.roofline import hlo_cost
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = hlo_cost.analyze(text, while_hint=while_hint)
+    mem = compiled.memory_analysis()
+    live = float(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    r = Roofline(flops=hc.flops, hbm_bytes=live,
+                 collective_bytes=hc.collective_bytes,
+                 chips=chips, model_flops=model_flops,
+                 dot_flops=hc.dot_flops, elem_flops=hc.elem_flops)
+    r.traffic_upper = hc.traffic_bytes
+    r.xla_flops = float(cost.get("flops", 0.0))
+    r.xla_bytes = float(cost.get("bytes accessed", 0.0))
+    r.unknown_while = hc.unknown_while
+    return r

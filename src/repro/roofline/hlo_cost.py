@@ -1,0 +1,272 @@
+"""Loop-aware cost extraction from post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, regardless of
+trip count (verified: a 10-iteration scan of a matmul reports 1 matmul of
+flops). Since this framework scans over layers / microbatches / attention
+blocks, that undercounts flops, HBM traffic and collective bytes by 1-2
+orders of magnitude. This module re-derives the three roofline inputs from
+the HLO text itself, multiplying each while body by its trip count:
+
+  * flops: every `dot(...)` — 2 * prod(result_shape) * prod(contracting dims)
+  * traffic: per top-level instruction, result bytes + operand bytes
+    (post-fusion granularity — each non-fused instruction materializes once;
+    fused-computation internals are excluded, the fusion boundary counts)
+  * collectives: all-reduce (x2 for ring) / all-gather / reduce-scatter /
+    all-to-all / collective-permute result bytes
+
+Trip counts come from the loop condition: XLA emits `compare(induction,
+constant(N)), direction=LT` (possibly wrapped in a fusion whose operand is
+the constant); induction starts at 0 and steps 1 for scan-derived loops, so
+the s32 constant IS the trip count. Unrecognized conditions fall back to a
+caller-provided hint (recorded in the result).
+
+All numbers are per-chip: the HLO module is the post-GSPMD per-shard program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_NO_TRAFFIC_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id"}
+
+# elementwise/VPU arithmetic: 1 flop per output element (so ℓ1-style
+# abs/subtract reductions are visible to the compute term, not just matmuls)
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "abs", "negate", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "maximum",
+    "minimum", "power", "rsqrt", "sqrt", "sine", "cosine", "select",
+    "logistic", "atan2", "clamp", "round-nearest-afz", "floor", "ceil",
+}
+_REDUCE_OPS = {"reduce", "reduce-window"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([^=]+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_dims(shape_str: str):
+    """[(dtype, [dims...]), ...] for a type string (handles tuples)."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dtype, d))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str          # operands + attributes (raw tail of the line)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    shapes: Dict[str, str]   # instr name -> result type string
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)),
+                              instrs=[], shapes={})
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        # operands: %refs before the first "), " attribute boundary
+        operands = re.findall(r"%([\w.\-]+)", rest.split("), ")[0])
+        cur.instrs.append(Instr(name=name, result_type=rtype.strip(), op=op,
+                                rest=rest, operands=operands))
+        cur.shapes[name] = rtype.strip()
+    return comps
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(lhs contracting dims)."""
+    res = _shape_dims(ins.result_type)
+    if not res:
+        return 0.0
+    n_out = 1
+    for d in res[0][1]:
+        n_out *= d
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    if not mc or not ins.operands:
+        return 2.0 * n_out  # dot with no contraction info: treat K=1
+    lhs_type = shapes.get(ins.operands[0], "")
+    lhs = _shape_dims(lhs_type)
+    if not lhs:
+        return 2.0 * n_out
+    k = 1
+    dims = lhs[0][1]
+    for ci in mc.group(1).split(","):
+        if ci != "" and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * n_out * k
+
+
+def _trip_count(cond: Computation, default: float) -> float:
+    """Largest s32 constant in the condition computation (scan loops compare
+    the 0-based induction var LT trip_count)."""
+    best = None
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.match(r"^\s*constant\((-?\d+)\)", ins.op + "(" + ins.rest)
+            mm = re.search(r"constant\((-?\d+)\)", "%s(%s" % (ins.op, ins.rest))
+            if mm and ins.result_type.startswith("s32"):
+                v = int(mm.group(1))
+                if best is None or v > best:
+                    best = v
+    return float(best) if best and best > 0 else default
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float            # total (dot + elementwise)
+    dot_flops: float        # MXU-eligible
+    elem_flops: float       # VPU (elementwise + reduces)
+    traffic_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    unknown_while: int      # loops whose trip count fell back to the hint
+
+
+def analyze(text: str, while_hint: float = 1.0) -> HloCost:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost(0.0, 0.0, 0.0, 0.0, 0.0, {}, 0)
+
+    # computations referenced as fusion bodies / reducers: no traffic of
+    # their own (counted at the boundary), but dots inside still count flops.
+    fused_bodies = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            for attr, names in re.findall(r"(calls|to_apply)=%([\w.\-]+)",
+                                          ins.rest):
+                fused_bodies.add(names)
+
+    state = {"unknown_while": 0}
+    coll: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    visited_stack: List[str] = []
+
+    def comp_cost(c: Computation, mult: float, traffic_on: bool):
+        flops = 0.0      # dot flops
+        eflops = 0.0     # elementwise flops
+        traffic = 0.0
+        if c.name in visited_stack:       # defensive: no recursion
+            return 0.0, 0.0, 0.0
+        visited_stack.append(c.name)
+        for ins in c.instrs:
+            if ins.op == "dot":
+                flops += _dot_flops(ins, c.shapes) * mult
+            elif ins.op in _ELEMENTWISE_OPS:
+                res = _shape_dims(ins.result_type)
+                if res:
+                    ne = 1
+                    for dd in res[0][1]:
+                        ne *= dd
+                    eflops += float(ne) * mult
+            elif ins.op in _REDUCE_OPS:
+                if ins.operands and ins.operands[0] in c.shapes:
+                    eflops += _shape_bytes(c.shapes[ins.operands[0]]) / 4.0 * mult
+            elif ins.op == "while":
+                body_m = re.search(r"body=%([\w.\-]+)", ins.rest)
+                cond_m = re.search(r"condition=%([\w.\-]+)", ins.rest)
+                trip = while_hint
+                if cond_m and cond_m.group(1) in comps:
+                    t = _trip_count(comps[cond_m.group(1)], -1.0)
+                    if t > 0:
+                        trip = t
+                    else:
+                        state["unknown_while"] += 1
+                if body_m and body_m.group(1) in comps:
+                    f2, e2, t2 = comp_cost(comps[body_m.group(1)], mult * trip,
+                                           traffic_on)
+                    flops += f2
+                    eflops += e2
+                    traffic += t2
+            elif ins.op in ("fusion", "call", "custom-call", "async-start"):
+                for _, cname in re.findall(r"(calls|to_apply)=%([\w.\-]+)",
+                                           ins.rest):
+                    if cname in comps:
+                        f2, e2, _ = comp_cost(comps[cname], mult, False)
+                        flops += f2
+                        eflops += e2
+            elif ins.op == "conditional":
+                for cname in re.findall(r"branch_computations=\{([^}]*)\}",
+                                        ins.rest):
+                    subs = re.findall(r"%([\w.\-]+)", cname)
+                    branch_costs = [comp_cost(comps[s], mult, traffic_on)
+                                    for s in subs if s in comps]
+                    if branch_costs:
+                        flops += max(b[0] for b in branch_costs)
+                        eflops += max(b[1] for b in branch_costs)
+                        traffic += max(b[2] for b in branch_costs)
+
+            kind = None
+            for k in _COLLECTIVES:
+                if ins.op == k or ins.op.startswith(k + "-"):
+                    kind = k
+                    break
+            if kind:
+                b = _shape_bytes(ins.result_type) * mult
+                if kind == "all-reduce":
+                    b *= 2.0            # ring: reduce-scatter + all-gather
+                coll[kind] += b
+
+            if traffic_on and ins.op not in _NO_TRAFFIC_OPS:
+                t = _shape_bytes(ins.result_type)
+                for o in ins.operands:
+                    if o in c.shapes:
+                        t += _shape_bytes(c.shapes[o])
+                traffic += t * mult
+        visited_stack.pop()
+        return flops, eflops, traffic
+
+    flops, eflops, traffic = comp_cost(entry, 1.0, True)
+    return HloCost(flops=flops + eflops, dot_flops=flops, elem_flops=eflops,
+                   traffic_bytes=traffic,
+                   collective_bytes=sum(coll.values()),
+                   collective_by_kind=coll,
+                   unknown_while=state["unknown_while"])

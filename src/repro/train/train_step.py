@@ -1,0 +1,103 @@
+"""train_step / serve_step factories.
+
+``make_train_step(model)`` returns a pure (state, batch) -> (state, metrics)
+function with optional gradient accumulation (scan over microbatches) and
+optional int8 gradient compression with error feedback. The launcher jits it
+with in/out shardings from ``repro.launch.partition``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw, compress, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    num_microbatches: int = 1
+    remat: bool = True
+    grad_compression: bool = False
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    ef: Optional[compress.EFState]   # error feedback (grad compression)
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, key, tcfg: TrainCfg) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        ef=compress.init_error_feedback(params) if tcfg.grad_compression else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(model: Model, tcfg: TrainCfg):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=tcfg.remat)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if tcfg.num_microbatches > 1:
+            n = tcfg.num_microbatches
+            sliced = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def micro(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)), sliced)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+
+        ef = state.ef
+        if tcfg.grad_compression:
+            grads, ef = compress.apply_error_feedback(grads, ef)
+
+        lr = schedule.cosine_with_warmup(
+            state.step + 1, peak_lr=tcfg.peak_lr,
+            warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps)
+        params, opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, lr=lr,
+            weight_decay=tcfg.weight_decay, max_grad_norm=tcfg.max_grad_norm)
+        new_state = TrainState(params=params, opt=opt, ef=ef,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, "lr": lr, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_serve_steps(model: Model, max_len: int):
+    """(prefill_fn, decode_fn) for the serving path."""
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    def decode(params, token, cache, pos, batch=None):
+        return model.decode_step(params, token, cache, pos, batch=batch)
+
+    return prefill, decode

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benchmarks must see the real (single) CPU device — the
+# 512-device XLA flag is set ONLY inside repro.launch.dryrun's own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

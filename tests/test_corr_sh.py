@@ -1,0 +1,123 @@
+"""Algorithm 1 (Correlated Sequential Halving): unit + property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (correlated_sequential_halving, corr_sh_medoid,
+                        exact_medoid, round_schedule, schedule_pulls)
+from repro.data.medoid_datasets import planted_medoid
+
+
+# ------------------------------- schedule ----------------------------------
+
+@given(n=st.integers(2, 5000), per_arm=st.integers(1, 200))
+@settings(max_examples=200, deadline=None)
+def test_schedule_respects_budget(n, per_arm):
+    budget = per_arm * n
+    rounds = round_schedule(n, budget)
+    assert rounds, "at least one round"
+    # paper: t_r = clip(floor(T / (|S_r| ceil(log2 n))), 1, n); with the
+    # t_r >= 1 floor, tiny budgets may exceed T, but never n * ceil(log2 n).
+    log2n = max(1, math.ceil(math.log2(n)))
+    assert schedule_pulls(n, budget) <= max(budget, n * log2n) + n
+
+
+@given(n=st.integers(2, 5000))
+@settings(max_examples=100, deadline=None)
+def test_schedule_halves(n):
+    rounds = round_schedule(n, 50 * n)
+    for a, b in zip(rounds, rounds[1:]):
+        assert b.survivors == math.ceil(a.survivors / 2)
+    assert rounds[0].survivors == n
+
+
+@given(n=st.integers(2, 2000))
+@settings(max_examples=50, deadline=None)
+def test_schedule_exact_branch_with_huge_budget(n):
+    # budget >= n^2 log2 n => t_0 == n: one exact round, output immediately
+    rounds = round_schedule(n, n * n * (math.ceil(math.log2(n)) or 1))
+    assert rounds[0].exact
+    assert len(rounds) == 1
+
+
+# ------------------------------ correctness --------------------------------
+
+def test_exact_branch_equals_exact_medoid():
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (257, 33))
+    res = correlated_sequential_halving(x, budget=257 * 257 * 20,
+                                        key=jax.random.key(1), metric="l2")
+    assert int(res.medoid) == int(exact_medoid(x, "l2"))
+    assert len(res.rounds) == 1 and res.rounds[0].exact
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "sql2", "cosine"])
+def test_finds_planted_medoid(metric):
+    key = jax.random.key(3)
+    x = planted_medoid(key, 512, 64, gap=3.0)
+    truth = int(exact_medoid(x, metric))
+    hits = 0
+    for s in range(5):
+        res = correlated_sequential_halving(
+            x, budget=512 * 64, key=jax.random.key(100 + s), metric=metric)
+        hits += int(res.medoid) == truth
+    assert hits >= 4, f"corrSH too unreliable for {metric}: {hits}/5"
+
+
+def test_error_decays_with_budget():
+    """The paper's central claim: error probability decays (roughly
+    exponentially) in budget."""
+    key = jax.random.key(9)
+    x = jax.random.normal(key, (256, 32))
+    x = x.at[: 128].mul(0.3)
+    truth = int(exact_medoid(x, "l2"))
+    errs = []
+    for per_arm in (4, 16, 64):
+        wrong = 0
+        for s in range(20):
+            m = int(corr_sh_medoid(x, jax.random.key(1000 + s),
+                                   budget=per_arm * 256, metric="l2"))
+            wrong += m != truth
+        errs.append(wrong)
+    assert errs[0] >= errs[-1]
+    assert errs[-1] <= 2
+
+
+def test_determinism():
+    x = jax.random.normal(jax.random.key(5), (128, 16))
+    a = int(corr_sh_medoid(x, jax.random.key(7), budget=128 * 20))
+    b = int(corr_sh_medoid(x, jax.random.key(7), budget=128 * 20))
+    assert a == b
+
+
+@given(n=st.integers(1, 65))
+@settings(max_examples=20, deadline=None)
+def test_small_n_never_crashes(n):
+    x = jax.random.normal(jax.random.key(n), (n, 8))
+    res = correlated_sequential_halving(x, budget=20 * max(n, 1),
+                                        key=jax.random.key(0))
+    assert 0 <= int(res.medoid) < n
+
+
+def test_permutation_equivariance():
+    """Medoid index should track a permutation of the dataset (exact branch)."""
+    key = jax.random.key(11)
+    x = jax.random.normal(key, (64, 8))
+    perm = jax.random.permutation(jax.random.key(12), 64)
+    big = 64 * 64 * 10
+    m1 = int(correlated_sequential_halving(x, big, jax.random.key(1)).medoid)
+    m2 = int(correlated_sequential_halving(x[perm], big, jax.random.key(1)).medoid)
+    assert int(perm[m2]) == m1
+
+
+def test_kernel_backed_matches_jnp():
+    from repro.kernels import ops as kops
+    x = jax.random.normal(jax.random.key(2), (200, 48))
+    a = correlated_sequential_halving(x, 200 * 30, jax.random.key(3), "l2")
+    b = correlated_sequential_halving(x, 200 * 30, jax.random.key(3), "l2",
+                                      pairwise_fn=kops.pairwise_kernel("l2"))
+    assert int(a.medoid) == int(b.medoid)

@@ -1,0 +1,151 @@
+"""Distributed medoid engine + partitioning: subprocess tests with 8 fake
+devices (the XLA device-count flag must be set before jax init, so these run
+in their own interpreter)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_distributed_corrsh_matches_exact():
+    out = _run("""
+import jax, jax.numpy as jnp, json
+from repro.core.distributed import distributed_corr_sh, make_row_sharding
+from repro.core import exact_medoid
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+n, d = 512, 32
+x = jax.random.normal(jax.random.key(1), (n, d))
+x = x.at[: n // 3].mul(0.25)
+xs = jax.device_put(x, make_row_sharding(mesh))
+truth = int(exact_medoid(x, "l1"))
+got_halving = int(distributed_corr_sh(xs, jax.random.key(7), mesh, budget=n*40, metric="l1"))
+got_exact = int(distributed_corr_sh(xs, jax.random.key(7), mesh, budget=n*n*20, metric="l1"))
+print(json.dumps({"truth": truth, "halving": got_halving, "exact": got_exact}))
+""")
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["exact"] == r["truth"]
+    assert r["halving"] == r["truth"]
+
+
+def test_distributed_matches_single_device_distribution():
+    """Same seed, same data: the distributed engine must agree with the
+    single-device reference at exact-budget (deterministic)."""
+    out = _run("""
+import jax, jax.numpy as jnp, json
+from repro.core.distributed import distributed_corr_sh, make_row_sharding
+from repro.core import correlated_sequential_halving
+mesh = jax.make_mesh((8,), ("data",))
+n, d = 256, 16
+x = jax.random.normal(jax.random.key(3), (n, d))
+xs = jax.device_put(x, make_row_sharding(mesh))
+a = int(distributed_corr_sh(xs, jax.random.key(0), mesh, budget=n*n*10, metric="l2"))
+b = int(correlated_sequential_halving(x, n*n*10, jax.random.key(0), "l2").medoid)
+print(json.dumps({"dist": a, "single": b}))
+""")
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["dist"] == r["single"]
+
+
+def test_distributed_v2_matches_exact():
+    """The communication-optimal engine (stratified refs, two-mode rounds)
+    must agree with exact computation and stay reliable under halving."""
+    out = _run("""
+import jax, jax.numpy as jnp, json
+from repro.core.distributed import make_row_sharding
+from repro.core.distributed_v2 import distributed_corr_sh_v2
+from repro.core import exact_medoid
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+n, d = 1024, 64
+x = jax.random.normal(jax.random.key(1), (n, d))
+x = x.at[: n // 3].mul(0.25)
+xs = jax.device_put(x, make_row_sharding(mesh))
+truth = int(exact_medoid(x, "l2"))
+hits = sum(int(distributed_corr_sh_v2(xs, jax.random.key(100+s), mesh,
+                                      budget=n*40, metric="l2")) == truth
+           for s in range(5))
+ex = int(distributed_corr_sh_v2(xs, jax.random.key(0), mesh,
+                                budget=n*n*20, metric="l2"))
+print(json.dumps({"truth": truth, "hits": hits, "exact": ex}))
+""")
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["exact"] == r["truth"]
+    assert r["hits"] >= 4
+
+
+def test_production_mesh_shapes():
+    out = _run("""
+import jax, json
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+m2 = make_production_mesh(multi_pod=True)
+print(json.dumps({"single": [m1.devices.shape, list(m1.axis_names)],
+                  "multi": [m2.devices.shape, list(m2.axis_names)]}))
+""", devices=512)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["single"] == [[16, 16], ["data", "model"]]
+    assert r["multi"] == [[2, 16, 16], ["pod", "data", "model"]]
+
+
+def test_param_specs_divisible_on_production_mesh():
+    """Every spec produced by the partitioner must divide its dim on the
+    production mesh, for every architecture (the dry-run precondition)."""
+    out = _run("""
+import jax, json
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import partition
+from repro.models.model import build_model
+mesh = make_production_mesh(multi_pod=True)
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+bad = []
+for arch in ARCH_NAMES:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = partition.param_specs(shape, cfg, mesh)
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shape)[0],
+            jax.tree_util.tree_flatten_with_path(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))[0]):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None: continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            k = 1
+            for a in axes: k *= sizes[a]
+            if dim % k: bad.append((arch, str(path), dim, str(spec)))
+print(json.dumps(bad))
+""", devices=512)
+    bad = json.loads(out.strip().splitlines()[-1])
+    assert not bad, bad
+
+
+def test_train_driver_multidevice_and_elastic_resume(tmp_path):
+    """Train 6 steps on 8 devices, checkpoint, then resume on 4 devices —
+    the elastic-reshard restart path."""
+    code = """
+import json
+from repro.launch.train import train
+out = train("internlm2-1.8b", smoke=True, steps=6, batch_size=8, seq_len=32,
+            ckpt_dir=%r, ckpt_every=3)
+print(json.dumps(out))
+"""
+    out1 = _run(code % str(tmp_path), devices=8)
+    r1 = json.loads(out1.strip().splitlines()[-1])
+    assert r1["steps"] == 6
+    out2 = _run(code.replace("steps=6", "steps=9") % str(tmp_path), devices=4)
+    r2 = json.loads(out2.strip().splitlines()[-1])
+    assert r2["steps"] == 9

@@ -1,0 +1,58 @@
+"""Watchdog, restart supervision, elastic mesh sizing."""
+import pytest
+
+from repro.runtime.fault_tolerance import (StepWatchdog, elastic_mesh_shape,
+                                           run_with_restarts)
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(min_samples=8)
+    for _ in range(20):
+        assert not wd.record(1.0)
+    assert wd.record(30.0)
+    assert wd.stragglers == 1
+
+
+def test_watchdog_tolerates_jitter():
+    wd = StepWatchdog(min_samples=8)
+    import random
+    random.seed(0)
+    flags = [wd.record(1.0 + random.random() * 0.02) for _ in range(50)]
+    assert sum(flags) == 0
+
+
+def test_run_with_restarts_resumes():
+    crashes = {"n": 0}
+    log = []
+
+    def step(t):
+        if t == 5 and crashes["n"] < 2:
+            crashes["n"] += 1
+            raise RuntimeError("node died")
+        log.append(t)
+        return t + 1
+
+    def on_restart(t, exc):
+        return 3   # "latest checkpoint"
+
+    final = run_with_restarts(step, start_step=0, total_steps=10,
+                              max_restarts=3, on_restart=on_restart)
+    assert final == 10
+    assert crashes["n"] == 2
+    assert log.count(4) == 3   # steps 3-4 re-executed after both restarts
+
+
+def test_run_with_restarts_gives_up():
+    def step(t):
+        raise RuntimeError("hard fail")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(step, start_step=0, total_steps=3, max_restarts=1,
+                          on_restart=lambda t, e: t)
+
+
+def test_elastic_mesh_shape():
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    assert elastic_mesh_shape(192, 16) == (12, 16)   # lost a host: dp shrinks
+    assert elastic_mesh_shape(100, 16) == (25, 4)    # tp degrades to fit
+    assert elastic_mesh_shape(7, 16) == (7, 1)

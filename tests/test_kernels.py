@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _data(c, r, d, dtype, seed=0):
+    k = jax.random.key(seed)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (c, d), dtype)
+    y = jax.random.normal(jax.random.fold_in(k, 2), (r, d), dtype)
+    return x, y
+
+
+SHAPES = [(1, 1, 1), (5, 3, 2), (128, 128, 256), (130, 257, 300),
+          (64, 512, 100), (333, 65, 129)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dot_kernel(shape, dtype):
+    x, y = _data(*shape, dtype)
+    got = ops.kernel_dot(x, y)
+    want = ref.ref_dot_pairwise(x, y)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l1_kernel(shape, dtype):
+    x, y = _data(*shape, dtype)
+    got = ops.kernel_l1(x, y)
+    want = ref.ref_l1_pairwise(x, y)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_l1_centrality_fused(shape):
+    x, y = _data(*shape, jnp.float32)
+    got = ops.kernel_l1_centrality(x, y)
+    want = ref.ref_l1_centrality(x, y)[:, 0] / y.shape[0]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", ["l2", "sql2", "cosine"])
+@pytest.mark.parametrize("shape", SHAPES[:4])
+def test_gram_metrics(metric, shape):
+    x, y = _data(*shape, jnp.float32)
+    got = ops.pairwise_kernel(metric)(x, y)
+    want = ref.ref_pairwise(metric, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(c=st.integers(1, 200), r=st.integers(1, 200), d=st.integers(1, 300),
+       metric=st.sampled_from(["l1", "l2", "sql2", "cosine"]))
+@settings(max_examples=25, deadline=None)
+def test_kernels_hypothesis(c, r, d, metric):
+    x, y = _data(c, r, d, jnp.float32, seed=c * 1000 + r)
+    got = ops.pairwise_kernel(metric)(x, y)
+    want = ref.ref_pairwise(metric, x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+    assert got.shape == (c, r)
+
+
+@given(c=st.integers(1, 64), d=st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_distance_properties(c, d):
+    """Metric axioms on the kernel outputs: symmetry + zero diagonal."""
+    x, _ = _data(c, c, d, jnp.float32, seed=d)
+    for metric in ("l1", "l2"):
+        m = np.asarray(ops.pairwise_kernel(metric)(x, x))
+        np.testing.assert_allclose(m, m.T, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.diag(m), 0.0, atol=1e-2)
+        assert (m >= -1e-3).all()

@@ -1,0 +1,68 @@
+"""AdamW, LR schedules, gradient compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, compress, schedule
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    target = jnp.asarray([1.0, 2.0, -1.0])
+    state = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(g, state, params, lr=5e-2,
+                                        weight_decay=0.0)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedule_warmup_and_decay():
+    lr0 = float(schedule.cosine_with_warmup(0, peak_lr=1.0, warmup_steps=10,
+                                            total_steps=100))
+    lr_peak = float(schedule.cosine_with_warmup(10, peak_lr=1.0,
+                                                warmup_steps=10, total_steps=100))
+    lr_end = float(schedule.cosine_with_warmup(100, peak_lr=1.0,
+                                               warmup_steps=10, total_steps=100))
+    assert lr0 == 0.0 and abs(lr_peak - 1.0) < 1e-6 and lr_end < 0.2
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_bounded(seed):
+    g = jax.random.normal(jax.random.key(seed), (1000,)) * 10
+    rt = compress.compress_decompress(g)
+    scale = jnp.max(jnp.abs(g.reshape(-1, 250)), axis=1)  # block bound
+    # int8 block quantization error <= scale/254 per element
+    err = jnp.abs(rt - g).max()
+    assert float(err) <= float(jnp.max(scale)) / 127.0 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """With error feedback, the SUM of transmitted grads tracks the sum of
+    true grads (residual stays bounded)."""
+    key = jax.random.key(0)
+    ef = compress.init_error_feedback({"w": jnp.zeros((256,))})
+    total_true = jnp.zeros((256,))
+    total_sent = jnp.zeros((256,))
+    for t in range(50):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, t), (256,))}
+        sent, ef = compress.apply_error_feedback(g, ef)
+        total_true += g["w"]
+        total_sent += sent["w"]
+    resid = ef.error["w"]
+    np.testing.assert_allclose(total_sent + resid, total_true,
+                               rtol=1e-4, atol=1e-4)
+    assert float(jnp.abs(resid).max()) < 0.2   # residual bounded, not growing
