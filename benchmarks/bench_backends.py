@@ -1,0 +1,80 @@
+"""Distance-backend sweep: reference vs pallas_pairwise vs pallas_fused.
+
+Two tables per (metric, n, d) cell:
+
+* **centrality**: time one round-shaped centrality call (C candidates x R
+  references -> (C,) estimates), the engine hot path, per backend; and
+* **end-to-end**: ``corr_sh_medoid`` wall time per backend, asserting all
+  backends return the same medoid on the same key (parity is part of the
+  benchmark contract, not just the test-suite's).
+
+The ``hbm_block_bytes`` column is the point of the fused path: the bytes the
+(C, R) block would occupy in HBM — materialized by reference/pallas_pairwise,
+*never allocated* by pallas_fused (its kernels reduce over references inside
+VMEM; the only (C,)-sized output leaves the kernel).
+
+On this CPU container the Pallas backends execute in interpret mode, so their
+absolute timings are correctness artifacts, not performance (see
+bench_kernels.py); the table still demonstrates parity and the memory shape
+of each path. On TPU the same sweep is the real roofline comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import corr_sh_medoid, get_backend, list_backends
+
+_CPU_INTERPRET_NOTE = "interpret-mode timing (correctness only off-TPU)"
+
+
+def _time(f, *args, reps: int = 3) -> float:
+    jax.block_until_ready(f(*args))          # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(grid: tuple[tuple[int, int], ...] = ((1024, 128), (2048, 256)),
+        metrics: tuple[str, ...] = ("l1", "l2", "sql2", "cosine"),
+        refs: int = 64, budget_per_arm: int = 24) -> list[dict]:
+    rows = []
+    on_tpu = jax.default_backend() == "tpu"
+    for n, d in grid:
+        key = jax.random.key(n + d)
+        data = jax.random.normal(key, (n, d))
+        y = data[:refs]
+        for metric in metrics:
+            for name in list_backends():
+                be = get_backend(name)
+                cent = jax.jit(be.centrality_sums(metric))
+                us = _time(cent, data, y)
+                blk = n * refs * 4 if be.materializes_block else 0
+                note = "" if (on_tpu or name == "reference") \
+                    else f" ({_CPU_INTERPRET_NOTE})"
+                rows.append({
+                    "name": f"centrality_{metric}_{name}_{n}x{refs}x{d}",
+                    "us_per_call": round(us, 1),
+                    "derived": f"hbm_block_bytes={blk}{note}",
+                })
+        # end-to-end parity + timing on one representative metric per cell
+        medoids = {}
+        for name in list_backends():
+            f = lambda x, k: corr_sh_medoid(x, k, budget=budget_per_arm * n,
+                                            metric="l2", backend=name)
+            us = _time(f, data, jax.random.key(7), reps=1)
+            medoids[name] = int(f(data, jax.random.key(7)))
+            rows.append({"name": f"corr_sh_l2_{name}_{n}x{d}",
+                         "us_per_call": round(us, 1),
+                         "derived": f"medoid={medoids[name]}"})
+        assert len(set(medoids.values())) == 1, \
+            f"backend medoid mismatch at n={n}, d={d}: {medoids}"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")

@@ -1,13 +1,39 @@
-"""Serve a small model with batched requests (continuous batching).
+"""Serve a small model with batched requests (continuous batching), plus the
+batched medoid engine as a sidecar service.
+
+LM serving and medoid identification share the serving pattern: many
+independent queries, one device dispatch. ``--medoid-batch B`` answers B
+"representative selection" queries (each: pick the medoid of a candidate
+embedding set, e.g. for prompt-cache clustering or retrieval dedup) in a
+single ``corr_sh_medoid_batch`` call on the selected distance backend.
 
     PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+    PYTHONPATH=src python examples/serve_lm.py --medoid-batch 8 \
+        --medoid-backend pallas_fused
 """
 import argparse
 import json
+import time
 
 import jax
 
+from repro.core import corr_sh_medoid_batch, list_backends
 from repro.launch.serve import Request, Server
+
+
+def serve_medoid_queries(batch: int, backend: str, *, n: int = 512,
+                         d: int = 64, budget_per_arm: int = 24,
+                         seed: int = 0) -> dict:
+    """Answer ``batch`` independent medoid queries in one dispatch."""
+    key = jax.random.key(seed)
+    sets = jax.random.normal(jax.random.fold_in(key, 1), (batch, n, d))
+    t0 = time.time()
+    medoids = corr_sh_medoid_batch(sets, jax.random.fold_in(key, 2),
+                                   budget=budget_per_arm * n,
+                                   metric="cosine", backend=backend)
+    medoids = [int(m) for m in medoids]
+    return {"queries": batch, "n": n, "d": d, "backend": backend,
+            "medoids": medoids, "batch_s": round(time.time() - t0, 3)}
 
 
 def main():
@@ -15,6 +41,10 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--medoid-batch", type=int, default=0,
+                    help="also serve B batched medoid queries")
+    ap.add_argument("--medoid-backend", default="pallas_fused",
+                    choices=list(list_backends()))
     args = ap.parse_args()
 
     srv = Server(args.arch, smoke=True, batch_slots=3, max_len=96)
@@ -28,6 +58,10 @@ def main():
     print(json.dumps(stats, indent=2))
     for r in reqs:
         print(f"request {r.rid}: generated {r.out}")
+
+    if args.medoid_batch > 0:
+        out = serve_medoid_queries(args.medoid_batch, args.medoid_backend)
+        print("medoid sidecar:", json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,14 @@
 """Paper core: Correlated Sequential Halving medoid identification."""
+from repro.core.backend import (
+    DistanceBackend,
+    get_backend,
+    list_backends,
+    register_backend,
+)
 from repro.core.corr_sh import (
     CorrSHResult,
     corr_sh_medoid,
+    corr_sh_medoid_batch,
     correlated_sequential_halving,
     round_schedule,
     schedule_pulls,
@@ -13,9 +20,10 @@ from repro.core.meddit import MedditResult, meddit_medoid
 from repro.core.rand import rand_medoid
 
 __all__ = [
-    "CorrSHResult", "corr_sh_medoid", "correlated_sequential_halving",
-    "round_schedule", "schedule_pulls", "METRICS", "full_distance_matrix",
-    "pairwise", "exact_medoid", "exact_theta", "HardnessStats",
-    "hardness_stats", "predicted_error_bound", "MedditResult",
-    "meddit_medoid", "rand_medoid",
+    "CorrSHResult", "DistanceBackend", "corr_sh_medoid",
+    "corr_sh_medoid_batch", "correlated_sequential_halving", "get_backend",
+    "list_backends", "register_backend", "round_schedule", "schedule_pulls",
+    "METRICS", "full_distance_matrix", "pairwise", "exact_medoid",
+    "exact_theta", "HardnessStats", "hardness_stats",
+    "predicted_error_bound", "MedditResult", "meddit_medoid", "rand_medoid",
 ]

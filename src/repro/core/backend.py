@@ -1,0 +1,126 @@
+"""Pluggable distance backends for the medoid engines.
+
+Every corrSH round boils down to two primitives over a candidate block
+``x: (C, d)`` and a reference block ``y: (R, d)``:
+
+* ``pairwise(metric)(x, y) -> (C, R)`` — the full distance block;
+* ``centrality_sums(metric)(x, y) -> (C,)`` — row sums ``sum_j d(x_i, y_j)``,
+  which is all the algorithm actually needs (estimates are means).
+
+A :class:`DistanceBackend` bundles one implementation of each, and the
+single-host (:mod:`repro.core.corr_sh`), batched, and distributed
+(:mod:`repro.core.distributed`, :mod:`repro.core.distributed_v2`) engines all
+consume the backend instead of hardcoding a distance path. Registered
+backends:
+
+``reference``
+    Pure-jnp blocked distances (:mod:`repro.core.distances`). The ground
+    truth everything else is validated against; ℓ1 centrality is
+    memory-bounded via the scan in ``distances.centrality_sums``.
+
+``pallas_pairwise``
+    Pallas kernels for the (C, R) block (MXU Gram kernel for l2/sql2/cosine,
+    VPU kernel for ℓ1); centrality is a row-sum *outside* the kernel, so the
+    block still round-trips through HBM.
+
+``pallas_fused``
+    Fused centrality kernels: the ℓ1 VPU kernel and the MXU
+    ``dot_centrality`` kernel reduce over references *inside* the kernel —
+    no round ever materializes the (s_r, t_r) block in HBM, for any metric.
+    This is the memory-roofline-optimal production path.
+
+On non-TPU hosts the Pallas backends transparently run in interpret mode
+(see :mod:`repro.kernels.ops`), so every backend is selectable everywhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Union
+
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.kernels import ops as kops
+
+PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+CentralityFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class DistanceBackend:
+    """One implementation of the round primitives, keyed by metric name."""
+    name: str
+    pairwise: Callable[[str], PairwiseFn]
+    centrality_sums: Callable[[str], CentralityFn]
+    materializes_block: bool   # does centrality ever put (C, R) in HBM?
+    description: str = ""
+
+
+_REGISTRY: dict[str, DistanceBackend] = {}
+
+
+def register_backend(backend: DistanceBackend) -> DistanceBackend:
+    """Add ``backend`` to the registry (last registration wins on a name)."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(backend: Union[str, DistanceBackend, None]) -> DistanceBackend:
+    """Resolve a backend name (or pass an instance through). ``None`` means
+    the reference backend."""
+    if backend is None:
+        return _REGISTRY["reference"]
+    if isinstance(backend, DistanceBackend):
+        return backend
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; one of {list_backends()}") from None
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# built-in backends
+# --------------------------------------------------------------------------
+
+def _reference_centrality(metric: str) -> CentralityFn:
+    def fn(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return distances.centrality_sums(x, y, metric)
+    return fn
+
+
+def _pairwise_rowsum_centrality(metric: str) -> CentralityFn:
+    kernel = kops.pairwise_kernel(metric)
+
+    def fn(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(kernel(x, y), axis=1)
+    return fn
+
+
+register_backend(DistanceBackend(
+    name="reference",
+    pairwise=distances.pairwise,
+    centrality_sums=_reference_centrality,
+    materializes_block=True,
+    description="pure-jnp blocked distances (ground truth)",
+))
+
+register_backend(DistanceBackend(
+    name="pallas_pairwise",
+    pairwise=kops.pairwise_kernel,
+    centrality_sums=_pairwise_rowsum_centrality,
+    materializes_block=True,
+    description="Pallas (C, R) block kernels + out-of-kernel row sum",
+))
+
+register_backend(DistanceBackend(
+    name="pallas_fused",
+    pairwise=kops.pairwise_kernel,
+    centrality_sums=kops.centrality_kernel,
+    materializes_block=False,
+    description="fused in-kernel reference reduction (no (C, R) in HBM)",
+))

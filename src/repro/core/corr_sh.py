@@ -22,14 +22,15 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.distances import pairwise
+from repro.core.backend import DistanceBackend, get_backend
 
 PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+BackendLike = Union[str, DistanceBackend, None]
 
 
 @dataclass(frozen=True)
@@ -85,25 +86,24 @@ def _sample_refs(key: jax.Array, n: int, t: int) -> jnp.ndarray:
     return jax.random.permutation(key, n)[:t].astype(jnp.int32)
 
 
-def correlated_sequential_halving(
-    data: jnp.ndarray,
-    budget: int,
-    key: jax.Array,
-    metric: str = "l2",
-    pairwise_fn: Optional[PairwiseFn] = None,
-) -> CorrSHResult:
-    """Run Algorithm 1. ``data: (n, d)``; returns the medoid index.
+def _resolve_theta_fn(metric: str, pairwise_fn: Optional[PairwiseFn],
+                      backend: BackendLike) -> Callable:
+    """Per-round estimator ``theta_fn(cand, refs) -> (C,)`` *sums* of
+    distances (divide by t_r for the mean)."""
+    if pairwise_fn is not None:
+        return lambda x, y: jnp.sum(pairwise_fn(x, y), axis=1)
+    return get_backend(backend).centrality_sums(metric)
 
-    ``pairwise_fn`` overrides the distance block implementation (e.g. with the
-    Pallas kernel wrapper from ``repro.kernels.ops``); defaults to the pure-jnp
-    blocked distance for ``metric``.
+
+def _run_rounds(data: jnp.ndarray, key: jax.Array, rounds: list[Round],
+                n: int, theta_fn: Callable):
+    """The round loop as a pure array program: static shapes only, no Python
+    state in the return value — safe under ``jax.vmap`` (the batched engine
+    maps this exact function over a leading batch axis).
+
+    Returns ``(medoid, theta_hat, r_stop)`` where ``r_stop`` is the (static)
+    index of the round that produced the output.
     """
-    n = int(data.shape[0])
-    dist = pairwise_fn if pairwise_fn is not None else pairwise(metric)
-    rounds = round_schedule(n, budget)
-    if not rounds:  # n == 1
-        return CorrSHResult(medoid=jnp.zeros((), jnp.int32), pulls=0)
-
     idx = jnp.arange(n, dtype=jnp.int32)  # surviving arm indices, shrinks per round
     theta_hat = None
     for r, rd in enumerate(rounds):
@@ -111,30 +111,78 @@ def correlated_sequential_halving(
         refs = _sample_refs(sub, n, rd.num_refs)
         cand_rows = data[idx]                  # (s_r, d)  static gather
         ref_rows = data[refs]                  # (t_r, d)
-        theta_hat = jnp.mean(dist(cand_rows, ref_rows), axis=1)  # (s_r,)
+        theta_hat = theta_fn(cand_rows, ref_rows) / ref_rows.shape[0]  # (s_r,)
         if rd.exact or idx.shape[0] <= 2:
             # exact estimates (t_r == n) or nothing left to halve: output argmin
-            return CorrSHResult(
-                medoid=idx[jnp.argmin(theta_hat)],
-                pulls=sum(x.pulls for x in rounds[: r + 1]),
-                rounds=rounds[: r + 1],
-                theta_hat=theta_hat,
-            )
+            return idx[jnp.argmin(theta_hat)], theta_hat, r
         keep = math.ceil(idx.shape[0] / 2)
         # smallest-theta half survives; top_k on negated values, static k
         _, order = jax.lax.top_k(-theta_hat, keep)
         idx = idx[order]
+    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
 
+
+def correlated_sequential_halving(
+    data: jnp.ndarray,
+    budget: int,
+    key: jax.Array,
+    metric: str = "l2",
+    pairwise_fn: Optional[PairwiseFn] = None,
+    backend: BackendLike = "reference",
+) -> CorrSHResult:
+    """Run Algorithm 1. ``data: (n, d)``; returns the medoid index.
+
+    ``backend`` selects the distance implementation from the registry in
+    :mod:`repro.core.backend` (``"reference"``, ``"pallas_pairwise"``,
+    ``"pallas_fused"``). ``pairwise_fn`` still overrides the distance block
+    directly (legacy hook; takes precedence over ``backend``).
+    """
+    n = int(data.shape[0])
+    rounds = round_schedule(n, budget)
+    if not rounds:  # n == 1
+        return CorrSHResult(medoid=jnp.zeros((), jnp.int32), pulls=0)
+    theta_fn = _resolve_theta_fn(metric, pairwise_fn, backend)
+    medoid, theta_hat, r_stop = _run_rounds(data, key, rounds, n, theta_fn)
     return CorrSHResult(
-        medoid=idx[jnp.argmin(theta_hat)],
-        pulls=sum(x.pulls for x in rounds),
-        rounds=rounds,
+        medoid=medoid,
+        pulls=sum(x.pulls for x in rounds[: r_stop + 1]),
+        rounds=rounds[: r_stop + 1],
         theta_hat=theta_hat,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "metric"))
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
 def corr_sh_medoid(data: jnp.ndarray, key: jax.Array, *, budget: int,
-                   metric: str = "l2") -> jnp.ndarray:
+                   metric: str = "l2",
+                   backend: str = "reference") -> jnp.ndarray:
     """Jitted entry point returning just the medoid index."""
-    return correlated_sequential_halving(data, budget, key, metric).medoid
+    return correlated_sequential_halving(data, budget, key, metric,
+                                         backend=backend).medoid
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
+def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                         metric: str = "l2",
+                         backend: str = "reference") -> jnp.ndarray:
+    """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices.
+
+    All queries share one static round schedule (shapes depend only on
+    ``(n, budget)``), so the whole batch is a single ``vmap`` of the round
+    loop — one XLA program, B independent reference draws (the key is split
+    per query; estimates stay independent across the batch). This is the
+    k-medoids / multi-tenant serving workload: B candidate sets answered in
+    one device dispatch.
+    """
+    if data.ndim != 3:
+        raise ValueError(f"expected (B, n, d) batch, got shape {data.shape}")
+    b, n, _ = data.shape
+    rounds = round_schedule(n, budget)
+    keys = jax.random.split(key, b)
+    if not rounds:  # n == 1
+        return jnp.zeros((b,), jnp.int32)
+    theta_fn = _resolve_theta_fn(metric, None, backend)
+
+    def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
+        return _run_rounds(x, k, rounds, n, theta_fn)[0]
+
+    return jax.vmap(one)(data, keys)

@@ -32,8 +32,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.backend import get_backend
 from repro.core.corr_sh import round_schedule
-from repro.core.distances import pairwise
+
+try:
+    # jax >= 0.6: shard_map is a public API and the replication check is
+    # spelled check_vma.
+    shard_map = functools.partial(jax.shard_map, check_vma=False)
+except AttributeError:
+    # jax 0.4/0.5: experimental module, check_rep spelling. Outputs are
+    # replicated via psum/all_gather either way, so the check is off.
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    shard_map = functools.partial(_experimental_shard_map, check_rep=False)
 
 
 def _gather_rows(x_local: jnp.ndarray, global_idx: jnp.ndarray,
@@ -53,13 +64,13 @@ def _gather_rows(x_local: jnp.ndarray, global_idx: jnp.ndarray,
 
 
 def make_distributed_corr_sh(mesh: Mesh, *, n: int, d: int, budget: int,
-                             metric: str = "l2"):
+                             metric: str = "l2", backend: str = "reference"):
     """Build the jitted distributed corrSH for a fixed (n, d, budget) — the
     lowerable artifact the dry-run compiles without allocating data."""
 
     def fn(x_global: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-        return _distributed_corr_sh_impl(x_global, key, mesh,
-                                         budget=budget, metric=metric)
+        return _distributed_corr_sh_impl(x_global, key, mesh, budget=budget,
+                                         metric=metric, backend=backend)
 
     return jax.jit(fn)
 
@@ -71,15 +82,18 @@ def distributed_corr_sh(
     *,
     budget: int,
     metric: str = "l2",
+    backend: str = "reference",
 ) -> jnp.ndarray:
     """Medoid of ``x_global: (n, d)`` on ``mesh`` (rows sharded over all axes).
 
     Returns the global medoid index (replicated scalar). n must be divisible by
     the total device count for the row sharding (pad upstream if needed).
+    ``backend`` picks the per-device distance implementation (the Pallas
+    backends run the same kernels inside each shard's round).
     """
     return make_distributed_corr_sh(
         mesh, n=int(x_global.shape[0]), d=int(x_global.shape[1]),
-        budget=budget, metric=metric)(x_global, key)
+        budget=budget, metric=metric, backend=backend)(x_global, key)
 
 
 def _distributed_corr_sh_impl(
@@ -89,6 +103,7 @@ def _distributed_corr_sh_impl(
     *,
     budget: int,
     metric: str = "l2",
+    backend: str = "reference",
 ) -> jnp.ndarray:
     axes = tuple(mesh.axis_names)
     num_devices = math.prod(mesh.devices.shape)
@@ -96,7 +111,7 @@ def _distributed_corr_sh_impl(
     if n % num_devices:
         raise ValueError(f"n={n} must be divisible by device count {num_devices}")
     n_local = n // num_devices
-    dist = pairwise(metric)
+    theta_fn = get_backend(backend).centrality_sums(metric)
     rounds = round_schedule(n, budget)
 
     def shard_fn(x_local: jnp.ndarray, key: jnp.ndarray) -> jnp.ndarray:
@@ -128,7 +143,7 @@ def _distributed_corr_sh_impl(
             my_valid = my >= 0
             cand_rows = jax.lax.dynamic_slice_in_dim(
                 cand_all, shard_id * per_dev, per_dev)             # (per_dev, d)
-            local_theta = jnp.mean(dist(cand_rows, ref_rows), axis=1)
+            local_theta = theta_fn(cand_rows, ref_rows) / ref_rows.shape[0]
             local_theta = jnp.where(my_valid, local_theta, jnp.inf)
             theta_hat = jax.lax.all_gather(local_theta, axes, tiled=True)[:s]
 
@@ -140,12 +155,7 @@ def _distributed_corr_sh_impl(
         return idx[jnp.argmin(theta_hat)]
 
     specs = P(axes)  # rows sharded over all axes jointly
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(specs, P()),
-        out_specs=P(),
-        check_vma=False,  # outputs are replicated via psum/all_gather
-    )
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=(specs, P()), out_specs=P())
     return fn(x_global, key)
 
 

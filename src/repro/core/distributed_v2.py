@@ -47,16 +47,37 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.backend import get_backend
 from repro.core.corr_sh import round_schedule
-from repro.core.distances import centrality_sums, pairwise
+from repro.core.distributed import shard_map
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def survivor_keep_mask(theta_global: jnp.ndarray, keep: int,
+                       offset, n_local: int):
+    """Local-shard membership mask for the ``keep`` smallest global estimates.
+
+    Selecting survivors with a value threshold (``theta <= kth``) keeps MORE
+    than ``keep`` arms when estimates tie at the k-th value (common for
+    integer / one-hot data), silently breaking the static round schedule.
+    ``lax.top_k`` breaks ties by lower index, so membership in its index set
+    keeps *exactly* ``keep`` arms — the same tie-break the compact
+    (``surv_idx``) path uses. Returns ``(local_mask, order)``: the boolean
+    mask over this shard's ``n_local`` rows and the global top-k indices.
+    """
+    n = theta_global.shape[0]
+    _, order = jax.lax.top_k(-theta_global, keep)
+    keep_global = jnp.zeros((n,), bool).at[order].set(True)
+    local = jax.lax.dynamic_slice_in_dim(keep_global, offset, n_local)
+    return local, order.astype(jnp.int32)
+
+
 def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
                                 metric: str = "l2",
+                                backend: str = "reference",
                                 gather_threshold_factor: int = 4,
                                 wire_dtype=jnp.bfloat16):
     axes = tuple(mesh.axis_names)
@@ -64,6 +85,7 @@ def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
     if n % num_devices:
         raise ValueError(f"n={n} must divide device count {num_devices}")
     n_local = n // num_devices
+    theta_sums = get_backend(backend).centrality_sums(metric)
     rounds = round_schedule(n, budget)
     threshold = gather_threshold_factor * n_local
 
@@ -107,19 +129,20 @@ def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
                     ref_rows, local_refs * sel.astype(x_local.dtype),
                     slot, axis=0)
                 ref_rows = jax.lax.psum(ref_rows, axes)          # (t_r, d)
-                theta_loc = centrality_sums(x_local, ref_rows, metric) / t_r
+                theta_loc = theta_sums(x_local, ref_rows) / t_r
                 theta_loc = jnp.where(alive, theta_loc, jnp.inf)
                 theta_global = jax.lax.all_gather(theta_loc, axes, tiled=True)
                 if rd.exact or s_r <= 2:
                     return jnp.argmin(theta_global).astype(jnp.int32)
                 keep = math.ceil(s_r / 2)
-                # global threshold: keep the k smallest estimates
-                kth = jax.lax.top_k(-theta_global, keep)[0][-1]
-                alive = alive & (theta_loc <= -kth)
+                # keep exactly the k smallest estimates, ties broken by index
+                # (a value threshold over-keeps on ties — see survivor_keep_mask)
+                local_keep, order = survivor_keep_mask(theta_global, keep,
+                                                       offset, n_local)
+                alive = alive & local_keep
                 if keep <= threshold:
                     # transition: materialize the compact survivor index list
-                    _, order = jax.lax.top_k(-theta_global, keep)
-                    surv_idx = order.astype(jnp.int32)           # replicated
+                    surv_idx = order                             # replicated
             else:
                 # ---- replicate mode: gather survivor rows, refs stay local
                 if surv_idx is None:   # first round already small
@@ -131,8 +154,7 @@ def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
                 contrib = (x_local[safe]
                            * valid[:, None].astype(x_local.dtype))
                 cand = jax.lax.psum(contrib.astype(wire_dtype), axes)  # (s, d)
-                part = centrality_sums(cand.astype(x_local.dtype), local_refs,
-                                       metric) * sel
+                part = theta_sums(cand.astype(x_local.dtype), local_refs) * sel
                 theta = jax.lax.psum(part, axes) / t_r           # (s,)
                 if rd.exact or s <= 2:
                     return surv_idx[jnp.argmin(theta)]
@@ -144,9 +166,7 @@ def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
             return surv_idx[0]
         return jnp.argmin(theta_global).astype(jnp.int32)
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(P(axes), P()), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map(shard_fn, mesh=mesh, in_specs=(P(axes), P()), out_specs=P())
     return jax.jit(fn)
 
 

@@ -69,22 +69,61 @@ def _norms_sq(a: jnp.ndarray) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def kernel_sql2(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
-    g = kernel_dot(x, y, interpret)
+    # NB: ``interpret`` is in kernel_dot's static_argnames — always forward it
+    # by keyword so the static/traced split never depends on positional
+    # signature resolution.
+    g = kernel_dot(x, y, interpret=interpret)
     return jnp.maximum(_norms_sq(x)[:, None] + _norms_sq(y)[None, :] - 2.0 * g, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def kernel_l2(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
-    return jnp.sqrt(kernel_sql2(x, y, interpret))
+    return jnp.sqrt(kernel_sql2(x, y, interpret=interpret))
+
+
+def _unit_rows(a: jnp.ndarray) -> jnp.ndarray:
+    af = a.astype(jnp.float32)
+    return af / jnp.maximum(jnp.linalg.norm(af, axis=-1, keepdims=True), 1e-12)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def kernel_cosine(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
-    xn = x.astype(jnp.float32) / jnp.maximum(
-        jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True), 1e-12)
-    yn = y.astype(jnp.float32) / jnp.maximum(
-        jnp.linalg.norm(y.astype(jnp.float32), axis=-1, keepdims=True), 1e-12)
-    return 1.0 - kernel_dot(xn, yn, interpret)
+    return 1.0 - kernel_dot(_unit_rows(x), _unit_rows(y), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
+                           metric: str = "l2",
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Fused ``sum_j d(x_i, y_j)``: (C, d) x (R, d) -> (C,) distance sums.
+
+    Every metric routes through a fused kernel (ℓ1 VPU kernel or the MXU
+    ``dot_centrality`` kernel), so the (C, R) block never exists in HBM —
+    the memory-roofline win, now for all four metrics.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c, r = x.shape[0], y.shape[0]
+    if metric == "l1":
+        xp = _pad_to(x, pk.BC, pk.BD)
+        yp = _pad_to(y, pk.BR, pk.BD)
+        return pk.l1_centrality(xp, yp, r_true=r, interpret=interp)[:c, 0]
+    if metric == "cosine":
+        xf, yf = _unit_rows(x), _unit_rows(y)
+        xn2 = jnp.zeros((c, 1), jnp.float32)   # unused by the cosine path
+        yn2 = jnp.zeros((1, r), jnp.float32)
+    elif metric in ("l2", "sql2"):
+        xf = x.astype(jnp.float32)
+        yf = y.astype(jnp.float32)
+        xn2 = _norms_sq(xf)[:, None]
+        yn2 = _norms_sq(yf)[None, :]
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    xp = _pad_to(xf, pk.BC, pk.BD)
+    yp = _pad_to(yf, pk.BR, pk.BD)
+    xn2p = _pad_to(xn2, pk.BC, 1)
+    yn2p = _pad_to(yn2, 1, pk.BR)
+    return pk.dot_centrality(xp, yp, xn2p, yn2p, r, metric=metric,
+                             interpret=interp)[:c, 0]
 
 
 _KERNELS = {
@@ -101,3 +140,10 @@ def pairwise_kernel(metric: str):
         return _KERNELS[metric]
     except KeyError:
         raise ValueError(f"unknown metric {metric!r}") from None
+
+
+def centrality_kernel(metric: str):
+    """Fused row-sum centrality for ``metric``: ``f(x, y) -> (C,)`` sums."""
+    if metric not in _KERNELS:
+        raise ValueError(f"unknown metric {metric!r}")
+    return functools.partial(kernel_centrality_sums, metric=metric)

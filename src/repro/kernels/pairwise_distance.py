@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # Block sizes: MXU-aligned (multiples of 128 in the matmul dims). The ℓ1 VPU
 # kernel keeps the same tile footprint but chunks d to bound VMEM.
@@ -140,9 +141,9 @@ def _l1_centrality_kernel(x_ref, y_ref, o_ref, *, r_true: int):
     acc = jnp.zeros_like(o_ref)                        # (BC, 1)
     for c0 in range(0, BD, L1_CHUNK):
         xs = x[:, c0:c0 + L1_CHUNK]
-        ys = y[:, c0:c0 + L1_CHUNK] * mask             # zero padded rows
+        ys = y[:, c0:c0 + L1_CHUNK]
         a = jnp.abs(xs[:, None, :] - ys[None, :, :])   # (BC, BR, CHUNK)
-        # |x - 0| on padded rows must not count: mask the whole (r) slice
+        # padded reference rows must not count: mask the whole (r) slice
         a = a * mask[None, :, :]
         acc += jnp.sum(a, axis=(1, 2), keepdims=False)[:, None]
     o_ref[...] += acc
@@ -169,3 +170,81 @@ def l1_centrality(x: jnp.ndarray, y: jnp.ndarray, r_true: int, *,
         out_shape=jax.ShapeDtypeStruct((c, 1), jnp.float32),
         interpret=interpret,
     )(x, y)
+
+
+# --------------------------------------------------------------------------
+# fused dot-centrality kernel (MXU): S[c] = sum_{r < r_true} d(X[c], Y[r])
+# for the Gram-trick metrics. The (BC, BR) distance tile lives only in a VMEM
+# scratch accumulator — the (C, R) block is never materialized in HBM, which
+# makes every metric's round memory-roofline-optimal, not just ℓ1.
+#
+# The d-axis (grid dim k, innermost) accumulates raw inner products into the
+# scratch tile; at the last k step the metric's elementwise transform
+# (sql2 / l2 / cosine) is applied to the *complete* Gram tile — sqrt does not
+# commute with the d-reduction, hence the scratch carry — padded reference
+# rows are masked by global row index, and the row-sum folds into o_ref.
+# --------------------------------------------------------------------------
+
+def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, o_ref, acc_ref, *,
+                           metric: str, r_true: int, nk: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        g = acc_ref[...]                                   # (BC, BR) complete
+        if metric == "cosine":
+            # inputs pre-normalized outside: distance is 1 - <x̂, ŷ>
+            v = 1.0 - g
+        else:
+            sq = jnp.maximum(xn_ref[...] + yn_ref[...] - 2.0 * g, 0.0)
+            v = jnp.sqrt(sq) if metric == "l2" else sq
+        col = j * BR + jax.lax.broadcasted_iota(jnp.int32, (1, BR), 1)
+        v = v * (col < r_true).astype(jnp.float32)         # mask padded refs
+        o_ref[...] += jnp.sum(v, axis=1, keepdims=True)    # (BC, 1)
+
+
+def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
+                   yn2: jnp.ndarray, r_true: int, *, metric: str,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Row sums of ``d(X, Y)`` over the first ``r_true`` rows of Y for the
+    MXU metrics, fused past the Gram stage.
+
+    x: (C, d), y: (R, d) padded to block multiples; xn2: (C, 1), yn2: (1, R)
+    squared row norms (ignored for cosine — pass zeros and pre-normalized
+    x/y). Returns (C, 1) f32 distance sums (not yet divided by r_true).
+    """
+    if metric not in ("l2", "sql2", "cosine"):
+        raise ValueError(f"dot_centrality does not support metric {metric!r}")
+    c, d = x.shape
+    r, _ = y.shape
+    grid = (c // BC, r // BR, d // BD)
+    kern = functools.partial(_dot_centrality_kernel, metric=metric,
+                             r_true=r_true, nk=d // BD)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BC, BD), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BR, BD), lambda i, j, k: (j, k)),
+            pl.BlockSpec((BC, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, BR), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BC, 1), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BC, BR), jnp.float32)],
+        interpret=interpret,
+    )(x, y, xn2, yn2)

@@ -4,9 +4,15 @@ Runs Correlated Sequential Halving (single-device or distributed over
 whatever mesh exists), with per-round survivor checkpointing so a preempted
 job restarts mid-algorithm (rounds are idempotent given (seed, round)).
 
+``--backend`` selects the distance implementation from the registry in
+``repro.core.backend`` (reference | pallas_pairwise | pallas_fused);
+``--batch B`` answers B independent queries in one dispatch via
+``corr_sh_medoid_batch``.
+
 Example:
   PYTHONPATH=src python -m repro.launch.medoid --n 4096 --d 512 \
-      --metric l1 --budget-per-arm 30 --dataset rnaseq20k_like
+      --metric l1 --budget-per-arm 30 --dataset rnaseq20k_like \
+      --backend pallas_fused --batch 8
 """
 from __future__ import annotations
 
@@ -19,48 +25,68 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import manager as ckpt
-from repro.core import (corr_sh_medoid, exact_medoid, meddit_medoid,
-                        rand_medoid, round_schedule, schedule_pulls)
+from repro.core import (corr_sh_medoid, corr_sh_medoid_batch, exact_medoid,
+                        list_backends, meddit_medoid, rand_medoid,
+                        round_schedule, schedule_pulls)
 from repro.core.distributed import distributed_corr_sh, make_row_sharding
 from repro.core.distributed_v2 import distributed_corr_sh_v2
 from repro.data.medoid_datasets import DATASETS, planted_medoid
-from repro.kernels import ops as kops
 from repro.runtime.fault_tolerance import elastic_remesh
 
 
 def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
         *, seed: int = 0, use_kernel: bool = False, distributed: bool = False,
-        compare: bool = False, ckpt_dir: str | None = None) -> dict:
+        compare: bool = False, ckpt_dir: str | None = None,
+        backend: str = "reference", batch: int = 0) -> dict:
     key = jax.random.key(seed)
+    if use_kernel and backend == "reference":
+        backend = "pallas_pairwise"   # legacy flag -> kernel-backed blocks
+
+    def gen_data(k):
+        if dataset in DATASETS:
+            return DATASETS[dataset][1](k, n, d)
+        return planted_medoid(k, n, d)
+
     if dataset in DATASETS:
-        metric_default, gen = DATASETS[dataset]
-        metric = metric or metric_default
-        data = gen(key, n, d)
+        metric = metric or DATASETS[dataset][0]
     else:
-        data = planted_medoid(key, n, d)
         metric = metric or "l2"
+    if batch > 0 and distributed:
+        raise ValueError("--batch and --distributed are mutually exclusive; "
+                         "the batched engine is single-host (vmap)")
+    data = None if batch > 0 else gen_data(key)
 
     budget = budget_per_arm * n
     sched = round_schedule(n, budget)
     out = {"n": n, "d": d, "metric": metric, "budget": budget,
+           "backend": backend,
            "pulls_scheduled": schedule_pulls(n, budget),
            "rounds": [(r.survivors, r.num_refs) for r in sched]}
 
     t0 = time.time()
-    if distributed and len(jax.devices()) > 1:
+    if batch > 0:
+        # multi-query mode: B independent candidate sets, one dispatch
+        batch_data = jnp.stack([gen_data(jax.random.fold_in(key, 100 + b))
+                                for b in range(batch)])
+        medoids = corr_sh_medoid_batch(batch_data, jax.random.fold_in(key, 1),
+                                       budget=budget, metric=metric,
+                                       backend=backend)
+        out["mode"] = f"batch x{batch} ({backend})"
+        out["medoids"] = [int(m) for m in medoids]
+        medoid = out["medoids"][0]
+        data = batch_data[0]
+    elif distributed and len(jax.devices()) > 1:
         mesh = elastic_remesh(preferred_tp=1)
         data_sh = jax.device_put(data, make_row_sharding(mesh))
         medoid = int(distributed_corr_sh_v2(data_sh, jax.random.fold_in(key, 1),
-                                            mesh, budget=budget, metric=metric))
-        out["mode"] = f"distributed-v2 x{len(jax.devices())}"
+                                            mesh, budget=budget, metric=metric,
+                                            backend=backend))
+        out["mode"] = f"distributed-v2 x{len(jax.devices())} ({backend})"
     else:
-        from repro.core.corr_sh import correlated_sequential_halving
-        pairwise_fn = kops.pairwise_kernel(metric) if use_kernel else None
-        res = correlated_sequential_halving(
-            data, budget, jax.random.fold_in(key, 1), metric,
-            pairwise_fn=pairwise_fn)
-        medoid = int(res.medoid)
-        out["mode"] = "kernel" if use_kernel else "jnp"
+        medoid = int(corr_sh_medoid(data, jax.random.fold_in(key, 1),
+                                    budget=budget, metric=metric,
+                                    backend=backend))
+        out["mode"] = backend
     out["medoid"] = medoid
     out["corrsh_s"] = round(time.time() - t0, 3)
 
@@ -90,7 +116,12 @@ def main(argv=None):
     ap.add_argument("--dataset", default="planted",
                     choices=["planted"] + list(DATASETS))
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="legacy alias for --backend pallas_pairwise")
+    ap.add_argument("--backend", default="reference",
+                    choices=list(list_backends()))
+    ap.add_argument("--batch", type=int, default=0,
+                    help="answer B independent queries in one dispatch")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--compare", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
@@ -99,7 +130,8 @@ def main(argv=None):
                          args.dataset, seed=args.seed,
                          use_kernel=args.use_kernel,
                          distributed=args.distributed, compare=args.compare,
-                         ckpt_dir=args.ckpt_dir)))
+                         ckpt_dir=args.ckpt_dir, backend=args.backend,
+                         batch=args.batch)))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,114 @@
+"""Tiny local stand-in for ``hypothesis`` so tier-1 collects everywhere.
+
+The container this repo is verified in does not ship ``hypothesis``; four test
+modules use it for property-style sweeps. Importing from this module instead of
+``hypothesis`` keeps those tests running in both worlds:
+
+* when ``hypothesis`` IS installed, its real ``given``/``settings``/strategies
+  are re-exported unchanged (full shrinking, example database, etc.);
+* when it is absent, a deterministic fallback runs each property over a fixed,
+  seed-derived set of examples: the strategy bounds (the classic edge cases)
+  first, then pseudo-random interior points drawn from a PRNG seeded by the
+  test name — stable across runs and machines, no external deps.
+
+Only the strategy surface the test-suite uses is implemented (``integers``,
+``sampled_from``, ``floats``, ``booleans``). Add more as tests need them.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    # Cap on examples per property in fallback mode. Hypothesis amortizes its
+    # example count over shrinking; a plain sweep doesn't need hundreds of
+    # draws to catch shape/edge bugs, and jit-heavy properties recompile per
+    # distinct shape. Override with REPRO_COMPAT_MAX_EXAMPLES.
+    _MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_COMPAT_MAX_EXAMPLES", "10"))
+
+    class _Strategy:
+        """Deterministic example source mirroring a hypothesis strategy."""
+
+        def __init__(self, boundary, draw):
+            self._boundary = list(boundary)  # always-tried edge cases
+            self._draw = draw                # rng -> interior example
+
+        def examples(self, rng: random.Random, count: int) -> list:
+            out = list(self._boundary[:count])
+            while len(out) < count:
+                out.append(self._draw(rng))
+            return out
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            edges = [min_value, max_value]
+            if max_value - min_value > 1:
+                edges.append(min_value + 1)
+            return _Strategy(edges, lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elems = list(elements)
+            return _Strategy(elems, lambda r: r.choice(elems))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy([min_value, max_value],
+                             lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy([False, True], lambda r: r.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 100, **_ignored):
+        """Record ``max_examples`` for ``given`` to pick up; other hypothesis
+        knobs (deadline, phases, ...) have no fallback meaning and are ignored."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            n_ex = min(getattr(fn, "_compat_max_examples", 100),
+                       _MAX_EXAMPLES_CAP)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # Stable per-test seed: same examples on every run/machine.
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                pos_ex = [s.examples(rng, n_ex) for s in pos_strategies]
+                kw_ex = {k: s.examples(rng, n_ex)
+                         for k, s in kw_strategies.items()}
+                for i in range(n_ex):
+                    drawn_pos = [ex[i] for ex in pos_ex]
+                    drawn_kw = {k: ex[i] for k, ex in kw_ex.items()}
+                    try:
+                        fn(*args, *drawn_pos, **kwargs, **drawn_kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n_ex}): "
+                            f"args={drawn_pos} kwargs={drawn_kw}") from e
+
+            # The strategy-filled parameters are supplied here, not by
+            # pytest — hide them so they aren't mistaken for fixtures.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -1,0 +1,128 @@
+"""Distance-backend layer: registry semantics + cross-backend parity.
+
+Every registered backend must agree with ``repro.core.distances`` on both
+round primitives (pairwise block, centrality sums) for all four metrics, on
+shapes that are exact kernel-block multiples and shapes that force padding —
+and the engines must return *identical* medoids under every backend for a
+fixed key (the backends differ in memory traffic, never in answers).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (METRICS, corr_sh_medoid, corr_sh_medoid_batch,
+                        exact_medoid, get_backend, list_backends, pairwise,
+                        register_backend)
+from repro.core.backend import DistanceBackend
+
+BACKENDS = list_backends()
+
+# one block-aligned shape (BC=128, BR=128, BD=256) and two ragged ones
+SHAPES = [(128, 128, 256), (130, 67, 40), (3, 5, 2)]
+
+
+def _data(c, r, d, seed=0):
+    k = jax.random.key(seed)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (c, d))
+    y = jax.random.normal(jax.random.fold_in(k, 2), (r, d))
+    return x, y
+
+
+# ------------------------------- registry ----------------------------------
+
+def test_registry_contents():
+    assert {"reference", "pallas_pairwise", "pallas_fused"} <= set(BACKENDS)
+    assert get_backend(None).name == "reference"
+    assert get_backend("pallas_fused") is get_backend("pallas_fused")
+    assert not get_backend("pallas_fused").materializes_block
+    assert get_backend("reference").materializes_block
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("no_such_backend")
+    with pytest.raises(ValueError):
+        corr_sh_medoid(jnp.zeros((4, 2)), jax.random.key(0), budget=40,
+                       backend="no_such_backend")
+
+
+def test_register_custom_backend():
+    doubled = DistanceBackend(
+        name="_test_doubled",
+        pairwise=lambda m: lambda x, y: 2.0 * pairwise(m)(x, y),
+        centrality_sums=lambda m: lambda x, y: 2.0 * jnp.sum(
+            pairwise(m)(x, y), axis=1),
+        materializes_block=True)
+    register_backend(doubled)
+    assert get_backend("_test_doubled") is doubled
+    # scaling every distance by 2 is order-preserving: same medoid
+    x = jax.random.normal(jax.random.key(0), (64, 8))
+    a = int(corr_sh_medoid(x, jax.random.key(1), budget=64 * 20))
+    b = int(corr_sh_medoid(x, jax.random.key(1), budget=64 * 20,
+                           backend="_test_doubled"))
+    assert a == b
+
+
+# ------------------------------ primitive parity ---------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pairwise_parity(backend, shape, metric):
+    x, y = _data(*shape, seed=sum(shape))
+    got = get_backend(backend).pairwise(metric)(x, y)
+    want = pairwise(metric)(x, y)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_centrality_parity(backend, shape, metric):
+    x, y = _data(*shape, seed=sum(shape) + 1)
+    got = get_backend(backend).centrality_sums(metric)(x, y)
+    want = jnp.sum(pairwise(metric)(x, y), axis=1)
+    assert got.shape == (shape[0],)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=5e-3 * shape[1])
+
+
+# ------------------------------- engine parity -----------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_corr_sh_medoid_same_under_every_backend(metric):
+    x = jax.random.normal(jax.random.key(4), (200, 24))
+    key = jax.random.key(11)
+    medoids = {b: int(corr_sh_medoid(x, key, budget=200 * 25, metric=metric,
+                                     backend=b))
+               for b in ("reference", "pallas_pairwise", "pallas_fused")}
+    assert len(set(medoids.values())) == 1, medoids
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_fused"])
+def test_batch_engine_matches_exact_and_single(backend):
+    b, n, d = 3, 96, 12
+    data = jax.random.normal(jax.random.key(6), (b, n, d))
+    key = jax.random.key(8)
+    # exact budget -> every query's answer is the true medoid
+    got = corr_sh_medoid_batch(data, key, budget=n * n * 10, metric="l2",
+                               backend=backend)
+    want = [int(exact_medoid(data[i], "l2")) for i in range(b)]
+    assert [int(m) for m in got] == want
+    # halving budget -> each query matches the single-query engine run with
+    # the same per-query derived key (batch = vmap of the same round loop)
+    keys = jax.random.split(key, b)
+    got_h = corr_sh_medoid_batch(data, key, budget=n * 20, metric="l2",
+                                 backend=backend)
+    singles = [int(corr_sh_medoid(data[i], keys[i], budget=n * 20,
+                                  metric="l2", backend=backend))
+               for i in range(b)]
+    assert [int(m) for m in got_h] == singles
+
+
+def test_batch_engine_rejects_unbatched_input():
+    with pytest.raises(ValueError, match="expected"):
+        corr_sh_medoid_batch(jnp.zeros((8, 4)), jax.random.key(0), budget=80)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (correlated_sequential_halving, corr_sh_medoid,
                         exact_medoid, round_schedule, schedule_pulls)

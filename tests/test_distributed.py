@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess tests: own CI shard
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -85,6 +87,61 @@ print(json.dumps({"truth": truth, "hits": hits, "exact": ex}))
     r = json.loads(out.strip().splitlines()[-1])
     assert r["exact"] == r["truth"]
     assert r["hits"] >= 4
+
+
+def test_distributed_v2_tied_estimates_regression():
+    """Tied theta estimates (repeated one-hot rows) must not over-keep
+    survivors in v2's in-place mode: the engine still finds the planted
+    medoid and matches the exact-budget answer. Regression for the
+    value-threshold tie bug (see distributed_v2.survivor_keep_mask)."""
+    out = _run("""
+import jax, jax.numpy as jnp, json
+from repro.core.distributed import make_row_sharding
+from repro.core.distributed_v2 import distributed_corr_sh_v2
+from repro.core import exact_medoid
+mesh = jax.make_mesh((8,), ("data",))
+n = 256
+# 16 copies of each of 8 one-hot rows + 128 zero rows: estimates tie in
+# droves, and the zero block contains the unambiguous medoid.
+ones = jnp.tile(jnp.eye(8, 16), (16, 1))
+x = jnp.concatenate([ones, jnp.zeros((128, 16))]).astype(jnp.float32)
+xs = jax.device_put(x, make_row_sharding(mesh))
+truth = int(exact_medoid(x, "l1"))
+hits = sum(int(distributed_corr_sh_v2(xs, jax.random.key(50 + s), mesh,
+                                      budget=n*40, metric="l1")) == truth
+           for s in range(5))
+ex = int(distributed_corr_sh_v2(xs, jax.random.key(1), mesh,
+                                budget=n*n*20, metric="l1"))
+print(json.dumps({"truth": truth, "hits": hits, "exact": ex}))
+""")
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["exact"] == r["truth"]
+    assert r["hits"] >= 4
+
+
+def test_distributed_backend_parity():
+    """Pallas backends must agree with reference inside shard_map too."""
+    out = _run("""
+import jax, jax.numpy as jnp, json
+from repro.core.distributed import distributed_corr_sh, make_row_sharding
+from repro.core.distributed_v2 import distributed_corr_sh_v2
+mesh = jax.make_mesh((8,), ("data",))
+n, d = 256, 24
+x = jax.random.normal(jax.random.key(1), (n, d))
+xs = jax.device_put(x, make_row_sharding(mesh))
+res = {}
+for be in ("reference", "pallas_fused"):
+    res["v1_" + be] = int(distributed_corr_sh(xs, jax.random.key(7), mesh,
+                                              budget=n*30, metric="l2",
+                                              backend=be))
+    res["v2_" + be] = int(distributed_corr_sh_v2(xs, jax.random.key(7), mesh,
+                                                 budget=n*30, metric="l1",
+                                                 backend=be))
+print(json.dumps(res))
+""")
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["v1_reference"] == r["v1_pallas_fused"]
+    assert r["v2_reference"] == r["v2_pallas_fused"]
 
 
 def test_production_mesh_shapes():

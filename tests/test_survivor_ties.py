@@ -1,0 +1,56 @@
+"""Regression: v2's in-place survivor selection must keep exactly
+``ceil(s_r / 2)`` arms when estimates tie at the k-th value.
+
+The original code thresholded on the k-th *value* (``theta <= kth``), which
+keeps every arm tied at the threshold — on integer/one-hot data that can be
+far more than half, silently breaking the static round schedule. The fix
+selects by membership in ``lax.top_k``'s index set, which breaks ties by
+lower index exactly like the compact ``surv_idx`` path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed_v2 import survivor_keep_mask
+
+
+def test_keep_mask_exact_count_on_ties():
+    # five arms tied at the threshold value 1.0; keep=3 must not keep all five
+    theta = jnp.asarray([1.0, 1.0, 1.0, 1.0, 0.0, 2.0, 1.0, 3.0])
+    keep = 3
+    mask, order = survivor_keep_mask(theta, keep, 0, theta.shape[0])
+    assert int(mask.sum()) == keep
+    # old behavior for reference: value thresholding over-keeps
+    kth = jax.lax.top_k(-theta, keep)[0][-1]
+    assert int((theta <= -kth).sum()) == 6  # the bug this guards against
+    # index tie-break: the smallest value first, then lowest-index ties
+    np.testing.assert_array_equal(np.sort(np.asarray(order)), [0, 1, 4])
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True, True, False, False, True,
+                                   False, False, False])
+
+
+def test_keep_mask_agrees_with_top_k_path():
+    """The mask must be exactly the membership indicator of the top_k index
+    set the compact path uses — sharded or not."""
+    key = jax.random.key(0)
+    # integer data -> duplicated estimate values
+    theta = jax.random.randint(key, (64,), 0, 7).astype(jnp.float32)
+    for keep in (1, 7, 32, 63):
+        _, order = jax.lax.top_k(-theta, keep)
+        want = np.zeros(64, bool)
+        want[np.asarray(order)] = True
+        # assemble the mask from 4 shards of 16 rows
+        got = np.concatenate([
+            np.asarray(survivor_keep_mask(theta, keep, off, 16)[0])
+            for off in (0, 16, 32, 48)])
+        np.testing.assert_array_equal(got, want)
+        assert got.sum() == keep
+
+
+def test_keep_mask_all_tied():
+    theta = jnp.ones((32,))
+    mask, order = survivor_keep_mask(theta, 16, 0, 32)
+    assert int(mask.sum()) == 16
+    # lowest indices win on a full tie
+    np.testing.assert_array_equal(np.asarray(mask), np.arange(32) < 16)
