@@ -1,0 +1,110 @@
+"""Ragged multi-query sweep: bucketed one-dispatch batches vs per-query loop.
+
+For a mixed stream of query sizes (the acceptance set is n in {64, 257,
+1024}), this measures per backend:
+
+* **ragged**: bucket the queries (:mod:`repro.core.bucketing`), dispatch one
+  ``corr_sh_medoid_ragged`` call per bucket;
+* **loop**: the same queries through per-query ``corr_sh_medoid`` calls
+  (what a naive service would do — one compilation per *distinct n*, one
+  dispatch per query).
+
+Contract assertions baked into the benchmark (mirroring the test-suite):
+
+* every ragged medoid equals its per-query counterpart (exact-regime budget,
+  so both recover the true medoid), and
+* the ragged engine compiles at most ``ceil(log2(bucket(n_hi) /
+  bucket(n_lo))) + 1`` distinct programs per backend for the whole sweep —
+  the power-of-two bucket bound, independent of how many distinct n arrive.
+
+On this CPU container the Pallas backends run in interpret mode (correctness
+timings only); on TPU the same sweep is the serving-throughput comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (corr_sh_medoid, num_buckets_for_range, pack_queries,
+                        plan_buckets)
+from repro.core.corr_sh import corr_sh_medoid_ragged, ragged_compile_count
+
+
+def _mixed_queries(ns, d: int, copies: int, seed: int = 0):
+    key = jax.random.key(seed)
+    qs = []
+    for c in range(copies):
+        for n in ns:
+            qs.append(jax.random.normal(jax.random.fold_in(key, 1000 * c + n),
+                                        (n, d)))
+    return qs
+
+
+def run(ns: tuple[int, ...] = (64, 257, 1024), d: int = 16, copies: int = 2,
+        budget_per_arm: int | None = None,
+        backends: tuple[str, ...] = ("reference", "pallas_fused"),
+        seed: int = 0) -> list[dict]:
+    rows = []
+    qs = _mixed_queries(ns, d, copies, seed)
+    lengths = [q.shape[0] for q in qs]
+    plan = plan_buckets(lengths)
+    compile_bound = num_buckets_for_range(min(lengths), max(lengths))
+    key = jax.random.key(seed + 1)
+
+    for backend in backends:
+        # exact-regime budget per bucket unless told otherwise: both paths
+        # recover the true medoid, so answers must agree query-for-query
+        c0 = ragged_compile_count()
+        answers_ragged: dict[int, int] = {}
+        t_ragged = 0.0
+        for nb, idxs in plan.items():
+            group = [qs[i] for i in idxs]
+            data, lens = pack_queries(group, pad_batch_to=len(group))
+            bpa = (nb * 10) if budget_per_arm is None else budget_per_arm
+            t0 = time.time()
+            meds = corr_sh_medoid_ragged(data, lens, jax.random.fold_in(key, nb),
+                                         budget=bpa * nb, metric="l2",
+                                         backend=backend)
+            meds = [int(m) for m in meds]
+            dt = time.time() - t0
+            t_ragged += dt
+            for slot, i in enumerate(idxs):
+                answers_ragged[i] = meds[slot]
+            rows.append({
+                "name": f"ragged_{backend}_bucket{nb}x{len(group)}x{d}",
+                "us_per_call": round(dt * 1e6, 1),
+                "derived": f"medoids={meds}",
+            })
+        compiles = ragged_compile_count() - c0
+
+        bucket_of = {i: nb for nb, idxs in plan.items() for i in idxs}
+        t0 = time.time()
+        answers_loop = {}
+        for i, q in enumerate(qs):
+            nb = bucket_of[i]
+            bpa = (nb * 10) if budget_per_arm is None else budget_per_arm
+            answers_loop[i] = int(corr_sh_medoid(
+                q, jax.random.fold_in(jax.random.fold_in(key, 7), i),
+                budget=bpa * nb, metric="l2", backend=backend))
+        t_loop = time.time() - t0
+
+        assert answers_ragged == answers_loop, (
+            f"ragged/per-query medoid mismatch under {backend}: "
+            f"{answers_ragged} vs {answers_loop}")
+        assert compiles <= compile_bound, (
+            f"{backend}: {compiles} ragged compilations for the sweep, "
+            f"bucket bound is {compile_bound}")
+        rows.append({
+            "name": f"ragged_sweep_{backend}_{len(qs)}q",
+            "us_per_call": round(t_ragged * 1e6, 1),
+            "derived": (f"compiles={compiles}<=bound={compile_bound} "
+                        f"buckets={sorted(plan)} loop_us={t_loop * 1e6:.0f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")

@@ -30,13 +30,13 @@ def main() -> None:
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
                     choices=[None, "algorithms", "curves", "correlation",
-                             "kernels", "backends", "roofline"])
+                             "kernels", "backends", "ragged", "roofline"])
     args = ap.parse_args()
     scale = 2 if args.full else 1
 
     from benchmarks import (bench_algorithms, bench_backends,
                             bench_correlation, bench_error_curves,
-                            bench_kernels, roofline_table)
+                            bench_kernels, bench_ragged, roofline_table)
 
     sections = {
         "algorithms": lambda: bench_algorithms.run(
@@ -48,6 +48,8 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(),
         "backends": lambda: bench_backends.run(
             grid=((512 * scale, 64 * scale), (1024 * scale, 128 * scale))),
+        "ragged": lambda: bench_ragged.run(
+            ns=(64, 257, 1024), d=16 * scale),
         "roofline": lambda: roofline_table.run(
             ("results_dryrun_16x16.jsonl", "results_dryrun_2x16x16.jsonl")),
     }

@@ -7,6 +7,14 @@ embedding vectors — in O(n log n) distance evaluations instead of O(n^2).
 Works with ANY of the 10 supported architectures (--arch).
 
     PYTHONPATH=src python examples/embedding_medoid.py --arch qwen2.5-14b
+
+With ``--queries Q`` the corpus is split into Q uneven shards (per-topic /
+per-tenant selection) and each shard's representative is answered through the
+continuous-batching medoid service: queries are coalesced into power-of-two
+shape buckets and dispatched through the ragged engine, so the Q mixed-size
+queries share a handful of compiled programs instead of one per shard size.
+
+    PYTHONPATH=src python examples/embedding_medoid.py --queries 6
 """
 import argparse
 import time
@@ -43,6 +51,10 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--num-seqs", type=int, default=512)
     ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=1,
+                    help="split the corpus into Q uneven shards and answer "
+                         "each through the batched medoid service")
+    ap.add_argument("--backend", default="reference")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -82,6 +94,36 @@ def main():
           f"[{schedule_pulls(n, budget):,} pulls, {t_corr:.2f}s]")
     print(f"representative sequence (exact):  #{truth}  [{n * n:,} pulls]")
     print(f"match: {rep == truth}")
+
+    if args.queries > 1:
+        # per-shard representatives via the continuous-batching service:
+        # uneven shard sizes, bucketed dispatch, one answer per shard
+        from repro.launch.serve_medoid import MedoidServer
+
+        srv = MedoidServer(metric="l2", backend=args.backend,
+                           budget_per_arm=24, max_batch=args.queries)
+        bounds = sorted({int(x) for x in
+                         (n * (i + 1) ** 1.5 / args.queries ** 1.5
+                          for i in range(args.queries - 1))} | {n})
+        shards, lo = [], 0
+        for hi in bounds:
+            if hi > lo:
+                shards.append((lo, hi))
+                lo = hi
+        rids = {srv.submit(embs[a:b]): (a, b) for a, b in shards}
+        t0 = time.time()
+        srv.drain()
+        print(f"\n{len(shards)} shard queries answered in "
+              f"{srv.dispatches} dispatches "
+              f"({srv.stats()['distinct_buckets']} buckets, "
+              f"{srv.recompiles} compiles, {time.time() - t0:.2f}s):")
+        for rid, (a, b) in rids.items():
+            req = srv.done[rid]
+            local = int(req.medoid)
+            t_shard = int(exact_medoid(embs[a:b], "l2"))
+            print(f"  shard [{a:4d},{b:4d}) n={b - a:4d}: "
+                  f"representative #{a + local}  "
+                  f"(exact match: {local == t_shard})")
 
 
 if __name__ == "__main__":

@@ -5,11 +5,20 @@ from repro.core.backend import (
     list_backends,
     register_backend,
 )
+from repro.core.bucketing import (
+    DEFAULT_MIN_BUCKET,
+    bucket_n,
+    num_buckets_for_range,
+    pack_queries,
+    plan_buckets,
+)
 from repro.core.corr_sh import (
     CorrSHResult,
     corr_sh_medoid,
     corr_sh_medoid_batch,
+    corr_sh_medoid_ragged,
     correlated_sequential_halving,
+    ragged_compile_count,
     round_schedule,
     schedule_pulls,
 )
@@ -20,9 +29,12 @@ from repro.core.meddit import MedditResult, meddit_medoid
 from repro.core.rand import rand_medoid
 
 __all__ = [
-    "CorrSHResult", "DistanceBackend", "corr_sh_medoid",
-    "corr_sh_medoid_batch", "correlated_sequential_halving", "get_backend",
-    "list_backends", "register_backend", "round_schedule", "schedule_pulls",
+    "CorrSHResult", "DEFAULT_MIN_BUCKET", "DistanceBackend", "bucket_n",
+    "corr_sh_medoid", "corr_sh_medoid_batch", "corr_sh_medoid_ragged",
+    "correlated_sequential_halving", "get_backend", "list_backends",
+    "num_buckets_for_range", "pack_queries", "plan_buckets",
+    "ragged_compile_count", "register_backend", "round_schedule",
+    "schedule_pulls",
     "METRICS", "full_distance_matrix", "pairwise", "exact_medoid",
     "exact_theta", "HardnessStats", "hardness_stats",
     "predicted_error_bound", "MedditResult", "meddit_medoid", "rand_medoid",

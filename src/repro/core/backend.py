@@ -4,8 +4,13 @@ Every corrSH round boils down to two primitives over a candidate block
 ``x: (C, d)`` and a reference block ``y: (R, d)``:
 
 * ``pairwise(metric)(x, y) -> (C, R)`` — the full distance block;
-* ``centrality_sums(metric)(x, y) -> (C,)`` — row sums ``sum_j d(x_i, y_j)``,
-  which is all the algorithm actually needs (estimates are means).
+* ``centrality_sums(metric)(x, y, ref_mask=None) -> (C,)`` — row sums
+  ``sum_j d(x_i, y_j)``, which is all the algorithm actually needs (estimates
+  are means). The optional ``ref_mask`` keyword (shape (R,), nonzero = valid)
+  restricts the sum to valid references: the ragged multi-query engine pads
+  short queries up to a shared bucket size and masks the padded arms out of
+  every round *inside* the distance path (the fused Pallas kernels apply the
+  mask in VMEM, so invalid references cost no HBM traffic either).
 
 A :class:`DistanceBackend` bundles one implementation of each, and the
 single-host (:mod:`repro.core.corr_sh`), batched, and distributed
@@ -43,12 +48,18 @@ from repro.core import distances
 from repro.kernels import ops as kops
 
 PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
-CentralityFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# (x, y) -> (C,) sums; built-in backends also take ref_mask= (see module doc).
+CentralityFn = Callable[..., jnp.ndarray]
 
 
 @dataclass(frozen=True)
 class DistanceBackend:
-    """One implementation of the round primitives, keyed by metric name."""
+    """One implementation of the round primitives, keyed by metric name.
+
+    ``centrality_sums(metric)`` should return a function that also accepts an
+    optional ``ref_mask=`` keyword; backends that don't are still usable —
+    the ragged engine falls back to masking their ``pairwise`` block.
+    """
     name: str
     pairwise: Callable[[str], PairwiseFn]
     centrality_sums: Callable[[str], CentralityFn]
@@ -88,16 +99,18 @@ def list_backends() -> tuple[str, ...]:
 # --------------------------------------------------------------------------
 
 def _reference_centrality(metric: str) -> CentralityFn:
-    def fn(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-        return distances.centrality_sums(x, y, metric)
+    def fn(x: jnp.ndarray, y: jnp.ndarray,
+           ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+        return distances.centrality_sums(x, y, metric, ref_mask=ref_mask)
     return fn
 
 
 def _pairwise_rowsum_centrality(metric: str) -> CentralityFn:
     kernel = kops.pairwise_kernel(metric)
 
-    def fn(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-        return jnp.sum(kernel(x, y), axis=1)
+    def fn(x: jnp.ndarray, y: jnp.ndarray,
+           ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+        return distances.masked_rowsum(kernel(x, y), ref_mask)
     return fn
 
 

@@ -1,0 +1,99 @@
+"""Shape bucketing for ragged multi-query medoid batches.
+
+The ragged engine (:func:`repro.core.corr_sh.corr_sh_medoid_ragged`) traces
+one XLA program per *static* ``(B, n_bucket, d, budget)`` signature. Real
+query streams carry arbitrary per-query ``n``, so dispatching on raw shapes
+would compile once per distinct ``n`` — unbounded. This module quantizes
+``n`` to powers of two (with a small floor so tiny queries share one
+program), which caps the number of distinct compilations for queries in
+``[n_lo, n_hi]`` at ``ceil(log2(bucket(n_hi) / bucket(n_lo))) + 1``
+regardless of how many distinct lengths arrive.
+
+The service layer (:mod:`repro.launch.serve_medoid`) uses :func:`plan_buckets`
+to coalesce queued queries into per-bucket groups and :func:`pack_queries`
+to pad each group into the dense ``(B, n_bucket, d)`` + ``lengths`` form the
+engine consumes.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# Floor bucket size: every query with n <= 8 shares one compiled program.
+# Also keeps degenerate schedules (n_bucket of 1 or 2) out of the hot path.
+DEFAULT_MIN_BUCKET = 8
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    return 1 << (int(n) - 1).bit_length()
+
+
+def bucket_n(n: int, min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
+    """The padded arm count a query of ``n`` points dispatches under."""
+    if min_bucket < 1 or next_pow2(min_bucket) != min_bucket:
+        raise ValueError(f"min_bucket must be a power of two, got {min_bucket}")
+    return max(min_bucket, next_pow2(n))
+
+
+def num_buckets_for_range(n_lo: int, n_hi: int,
+                          min_bucket: int = DEFAULT_MIN_BUCKET) -> int:
+    """Worst-case distinct buckets (== compilations) for queries whose sizes
+    fall in ``[n_lo, n_hi]``: one per power of two between the two buckets."""
+    lo = bucket_n(n_lo, min_bucket)
+    hi = bucket_n(n_hi, min_bucket)
+    return (hi // lo).bit_length()  # log2(hi/lo) + 1, both powers of two
+
+
+def plan_buckets(lengths: Sequence[int],
+                 min_bucket: int = DEFAULT_MIN_BUCKET) -> "OrderedDict[int, list[int]]":
+    """Group query indices by bucket size, preserving arrival order.
+
+    Returns ``{n_bucket: [query indices]}`` ordered by first arrival, so a
+    FIFO scheduler that drains the first group services the oldest query
+    first.
+    """
+    plan: "OrderedDict[int, list[int]]" = OrderedDict()
+    for i, n in enumerate(lengths):
+        plan.setdefault(bucket_n(int(n), min_bucket), []).append(i)
+    return plan
+
+
+def pack_queries(arrays: Sequence[jnp.ndarray],
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 pad_batch_to: int | None = None):
+    """Pad a list of ``(n_i, d)`` query arrays into the ragged-engine form.
+
+    Returns ``(data, lengths)`` with ``data: (B, n_bucket, d)`` zero-padded
+    and ``lengths: (B,) int32``. All arrays must share ``d``. With
+    ``pad_batch_to`` the batch dimension is padded with dummy length-1
+    zero queries out to a fixed slot count, so a service dispatching variable
+    group sizes still hits one compiled program per bucket.
+    """
+    if not arrays:
+        raise ValueError("pack_queries needs at least one query")
+    if arrays[0].ndim != 2:
+        raise ValueError(
+            f"all queries must be (n_i, d) arrays, got shape {arrays[0].shape}")
+    d = arrays[0].shape[1]
+    for a in arrays:
+        if a.ndim != 2 or a.shape[1] != d:
+            raise ValueError(
+                f"all queries must be (n_i, {d}) arrays, got shape {a.shape}")
+        if a.shape[0] < 1:
+            raise ValueError("empty query (n == 0) — nothing to identify")
+    nb = bucket_n(max(a.shape[0] for a in arrays), min_bucket)
+    lengths = [a.shape[0] for a in arrays]
+    rows = [jnp.pad(a, ((0, nb - a.shape[0]), (0, 0))) for a in arrays]
+    if pad_batch_to is not None:
+        if pad_batch_to < len(arrays):
+            raise ValueError(
+                f"pad_batch_to={pad_batch_to} < batch size {len(arrays)}")
+        dummy = jnp.zeros((nb, d), rows[0].dtype)
+        rows += [dummy] * (pad_batch_to - len(arrays))
+        lengths += [1] * (pad_batch_to - len(lengths))
+    return jnp.stack(rows), jnp.asarray(lengths, jnp.int32)

@@ -20,14 +20,18 @@ Faithful to the paper:
 from __future__ import annotations
 
 import functools
+import inspect
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import distances
 from repro.core.backend import DistanceBackend, get_backend
+from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n
 
 PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 BackendLike = Union[str, DistanceBackend, None]
@@ -186,3 +190,149 @@ def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
         return _run_rounds(x, k, rounds, n, theta_fn)[0]
 
     return jax.vmap(one)(data, keys)
+
+
+# ---------------------------------------------------------------------------
+# ragged multi-query engine: per-query n via padding + validity masking
+# ---------------------------------------------------------------------------
+
+def _sample_refs_masked(key: jax.Array, n: int, t: int,
+                        valid: jnp.ndarray) -> jnp.ndarray:
+    """t reference indices favoring valid points: a uniform permutation of
+    [0, n) stably partitioned so valid indices come first (still in random
+    order — sampling without replacement among the valid points), invalid
+    ones trail. When every point is valid this is exactly ``_sample_refs``
+    (the stable partition of an all-zero rank is the identity), which is what
+    makes the ragged engine bit-identical to the dense one on full buckets.
+    """
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    perm = jax.random.permutation(key, n).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(valid[perm], 0, 1))  # jnp sort is stable
+    return perm[order][:t]
+
+
+def _resolve_masked_theta_fn(metric: str, backend: BackendLike) -> Callable:
+    """Mask-aware per-round estimator ``fn(cand, refs, ref_mask) -> (C,)``
+    sums over the *valid* references only. Built-in backends take ``ref_mask``
+    natively (the fused kernels apply it in VMEM); for a registered backend
+    that predates the keyword, fall back to masking its pairwise block."""
+    be = get_backend(backend)
+    fn = be.centrality_sums(metric)
+    try:
+        params = inspect.signature(fn).parameters
+        mask_native = "ref_mask" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+    except (TypeError, ValueError):   # builtins / odd callables: probe-free
+        mask_native = False
+    if mask_native:
+        return lambda x, y, m: fn(x, y, ref_mask=m)
+    pw = be.pairwise(metric)
+    return lambda x, y, m: distances.masked_rowsum(pw(x, y), m)
+
+
+def _run_rounds_masked(data: jnp.ndarray, valid: jnp.ndarray, key: jax.Array,
+                       rounds: list[Round], n: int, theta_fn: Callable):
+    """The round loop of ``_run_rounds`` generalized to a validity mask.
+
+    ``valid: (n,) bool`` marks real points; padded arms get +inf estimates
+    (never survive a halving ahead of any real arm, never win the argmin) and
+    contribute nothing as references (masked inside the distance path;
+    estimates divide by the drawn *valid* count). On an all-valid query every
+    array this computes is identical to ``_run_rounds`` — the parity the
+    ragged tests pin down.
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)   # surviving arm indices
+    theta_hat = None
+    for r, rd in enumerate(rounds):
+        key, sub = jax.random.split(key)
+        refs = _sample_refs_masked(sub, n, rd.num_refs, valid)
+        ref_mask = valid[refs].astype(jnp.float32)          # (t_r,)
+        sums = theta_fn(data[idx], data[refs], ref_mask)    # (s_r,) valid sums
+        denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+        theta_hat = jnp.where(valid[idx], sums / denom, jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            return idx[jnp.argmin(theta_hat)], theta_hat, r
+        keep = math.ceil(idx.shape[0] / 2)
+        _, order = jax.lax.top_k(-theta_hat, keep)
+        idx = idx[order]
+    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
+
+
+# Compilation odometer: bumped at *trace* time, i.e. exactly once per XLA
+# program the ragged engine compiles. The bucketing invariants ("a sweep over
+# mixed-n traffic compiles at most one program per bucket") are asserted
+# against this counter by the service tests and bench_ragged.
+_RAGGED_TRACES = 0
+
+
+def ragged_compile_count() -> int:
+    """Number of distinct XLA programs traced by the ragged engine so far."""
+    return _RAGGED_TRACES
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "metric", "backend", "n_bucket"))
+def _ragged_impl(data: jnp.ndarray, lengths: jnp.ndarray, key: jax.Array, *,
+                 budget: int, metric: str, backend: str,
+                 n_bucket: int) -> jnp.ndarray:
+    global _RAGGED_TRACES
+    _RAGGED_TRACES += 1                      # runs once per compilation
+    b = data.shape[0]
+    rounds = round_schedule(n_bucket, budget)
+    if not rounds:                           # n_bucket == 1
+        return jnp.zeros((b,), jnp.int32)
+    valid = jnp.arange(n_bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
+    keys = jax.random.split(key, b)
+    theta_fn = _resolve_masked_theta_fn(metric, backend)
+
+    def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
+        return _run_rounds_masked(x, v, k, rounds, n_bucket, theta_fn)[0]
+
+    return jax.vmap(one)(data, valid, keys)
+
+
+def corr_sh_medoid_ragged(data: jnp.ndarray, lengths, key: jax.Array, *,
+                          budget: int, metric: str = "l2",
+                          backend: str = "reference",
+                          min_bucket: int = DEFAULT_MIN_BUCKET) -> jnp.ndarray:
+    """Ragged multi-query medoid: ``data (B, n_max, d)`` + per-query
+    ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length).
+
+    Queries of heterogeneous sizes ride one XLA program: ``n_max`` is rounded
+    up to a power-of-two bucket (see :mod:`repro.core.bucketing` — this caps
+    compilations across arbitrary traffic), one static round schedule is
+    computed from ``(n_bucket, budget)``, and per-query padding is handled by
+    in-round validity masking — padded arms take +inf centrality and are
+    never counted as references. A query occupying its full bucket
+    (``length == n_bucket``) follows the exact same schedule, reference draws
+    and arithmetic as ``corr_sh_medoid(data[i], split(key, B)[i], ...)``.
+
+    Raises ``ValueError`` on an all-padding query (``length < 1``) or a
+    length exceeding ``n_max`` — rejected at admission, before any dispatch.
+    """
+    if data.ndim != 3:
+        raise ValueError(f"expected (B, n_max, d) batch, got shape {data.shape}")
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.shape != (data.shape[0],):
+        raise ValueError(f"lengths must be ({data.shape[0]},), "
+                         f"got {lengths.shape}")
+    try:                      # host-side admission checks (concrete lengths)
+        lens = np.asarray(lengths)
+    except jax.errors.TracerArrayConversionError:
+        lens = None           # called under an outer trace: caller's problem
+    if lens is not None:
+        if (lens < 1).any():
+            raise ValueError("all-padding query rejected: every query needs "
+                             f"length >= 1, got lengths={lens.tolist()}")
+        if (lens > data.shape[1]).any():
+            raise ValueError(f"length exceeds padded arm count "
+                             f"{data.shape[1]}: lengths={lens.tolist()}")
+    # Bucket-pad OUTSIDE the jitted impl: the raw n_max must never reach the
+    # jit cache key, or every distinct caller padding would compile its own
+    # program and the per-bucket compile cap would silently evaporate.
+    n_bucket = bucket_n(data.shape[1], min_bucket)
+    if data.shape[1] < n_bucket:
+        data = jnp.pad(data, ((0, 0), (0, n_bucket - data.shape[1]), (0, 0)))
+    return _ragged_impl(data, lengths, key, budget=budget, metric=metric,
+                        backend=backend, n_bucket=n_bucket)

@@ -79,6 +79,17 @@ def pairwise(metric: str) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
         raise ValueError(f"unknown metric {metric!r}; one of {METRICS}") from None
 
 
+def masked_rowsum(block: jnp.ndarray,
+                  ref_mask: jnp.ndarray | None) -> jnp.ndarray:
+    """Row sums of a (C, R) distance block over the valid reference columns
+    (``ref_mask`` broadcastable to (R,), nonzero = valid; None = all valid).
+    The single definition of out-of-kernel mask semantics — the pairwise
+    backends and the ragged engine's legacy-backend fallback all route here."""
+    if ref_mask is not None:
+        block = block * ref_mask.reshape(-1).astype(block.dtype)[None, :]
+    return jnp.sum(block, axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("metric",))
 def full_distance_matrix(x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
     """All-pairs (n, n) distance matrix — used by exact computation & oracles."""
@@ -86,23 +97,30 @@ def full_distance_matrix(x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
 
 
 def centrality_sums(x: jnp.ndarray, refs: jnp.ndarray, metric: str,
-                    ref_block: int = 32, d_chunk: int = 256) -> jnp.ndarray:
+                    ref_block: int = 32, d_chunk: int = 256,
+                    ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """sum_j d(x_i, refs_j) without materializing the (C, R) matrix — the
     memory-bounded form the distributed engine scores rounds with.
 
     For ℓ1 (no matmul form) the broadcast intermediate is bounded to
     (C, ref_block, d_chunk); Gram-trick metrics just take the row-sum of the
-    (cheap) pairwise matrix.
+    (cheap) pairwise matrix. ``ref_mask`` (shape (R,), nonzero = valid)
+    restricts the sum to valid references — the ragged engine's padded arms
+    contribute nothing.
     """
     if metric != "l1":
-        return jnp.sum(pairwise(metric)(x, refs), axis=1)
+        return masked_rowsum(pairwise(metric)(x, refs), ref_mask)
     C, d = x.shape
     R = refs.shape[0]
     rb = min(ref_block, R)
     pad = (-R) % rb
     refs_p = jnp.pad(refs, ((0, pad), (0, 0)))
     nb = refs_p.shape[0] // rb
-    mask = (jnp.arange(nb * rb) < R).astype(jnp.float32).reshape(nb, rb)
+    mask = (jnp.arange(nb * rb) < R).astype(jnp.float32)
+    if ref_mask is not None:
+        mask = mask * jnp.pad(ref_mask.reshape(-1).astype(jnp.float32),
+                              (0, pad))
+    mask = mask.reshape(nb, rb)
     xf = x.astype(jnp.float32)
 
     def body(acc, inp):

@@ -49,17 +49,34 @@ def kernel_l1(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None) -> 
     return pk.l1_pairwise(xp, yp, interpret=interp)[:c, :r]
 
 
+def _pad_ref_mask(ref_mask: jnp.ndarray | None, r: int,
+                  r_pad: int) -> jnp.ndarray | None:
+    """Pad a (r,) validity mask with zeros out to the kernel-padded length."""
+    if ref_mask is None:
+        return None
+    m = ref_mask.reshape(-1).astype(jnp.float32)
+    if r_pad > r:
+        m = jnp.pad(m, (0, r_pad - r))
+    return m
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def kernel_l1_centrality(x: jnp.ndarray, y: jnp.ndarray,
-                         interpret: bool | None = None) -> jnp.ndarray:
+                         interpret: bool | None = None,
+                         ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fused mean_j ℓ1(x_i, y_j): (C, d) x (R, d) -> (C,). Never materializes
-    the (C, R) matrix — the memory-roofline optimization for big ref sets."""
+    the (C, R) matrix — the memory-roofline optimization for big ref sets.
+    With ``ref_mask`` (shape (R,), nonzero = valid) the mean runs over the
+    valid references only."""
     interp = (not _on_tpu()) if interpret is None else interpret
     c, r = x.shape[0], y.shape[0]
     xp = _pad_to(x, pk.BC, pk.BD)
     yp = _pad_to(y, pk.BR, pk.BD)
-    sums = pk.l1_centrality(xp, yp, r_true=r, interpret=interp)[:c, 0]
-    return sums / r
+    mask = _pad_ref_mask(ref_mask, r, yp.shape[0])
+    sums = pk.l1_centrality(xp, yp, r_true=r, ref_mask=mask,
+                            interpret=interp)[:c, 0]
+    denom = r if ref_mask is None else jnp.maximum(jnp.sum(mask), 1.0)
+    return sums / denom
 
 
 def _norms_sq(a: jnp.ndarray) -> jnp.ndarray:
@@ -94,19 +111,24 @@ def kernel_cosine(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None)
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
                            metric: str = "l2",
-                           interpret: bool | None = None) -> jnp.ndarray:
+                           interpret: bool | None = None,
+                           ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fused ``sum_j d(x_i, y_j)``: (C, d) x (R, d) -> (C,) distance sums.
 
     Every metric routes through a fused kernel (ℓ1 VPU kernel or the MXU
     ``dot_centrality`` kernel), so the (C, R) block never exists in HBM —
-    the memory-roofline win, now for all four metrics.
+    the memory-roofline win, now for all four metrics. ``ref_mask`` (shape
+    (R,), nonzero = valid) drops invalid references from the sum *inside*
+    the kernel — the ragged engine's padded arms never contribute.
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     c, r = x.shape[0], y.shape[0]
     if metric == "l1":
         xp = _pad_to(x, pk.BC, pk.BD)
         yp = _pad_to(y, pk.BR, pk.BD)
-        return pk.l1_centrality(xp, yp, r_true=r, interpret=interp)[:c, 0]
+        mask = _pad_ref_mask(ref_mask, r, yp.shape[0])
+        return pk.l1_centrality(xp, yp, r_true=r, ref_mask=mask,
+                                interpret=interp)[:c, 0]
     if metric == "cosine":
         xf, yf = _unit_rows(x), _unit_rows(y)
         xn2 = jnp.zeros((c, 1), jnp.float32)   # unused by the cosine path
@@ -122,8 +144,9 @@ def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
     yp = _pad_to(yf, pk.BR, pk.BD)
     xn2p = _pad_to(xn2, pk.BC, 1)
     yn2p = _pad_to(yn2, 1, pk.BR)
+    mask = _pad_ref_mask(ref_mask, r, yp.shape[0])
     return pk.dot_centrality(xp, yp, xn2p, yn2p, r, metric=metric,
-                             interpret=interp)[:c, 0]
+                             ref_mask=mask, interpret=interp)[:c, 0]
 
 
 _KERNELS = {

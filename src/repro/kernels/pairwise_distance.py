@@ -23,8 +23,11 @@ pattern); the fused centrality kernel also folds j into the accumulation.
 
 All wrappers in ``ops.py`` pad shapes to block multiples; padded d-columns are
 zeros (contribute 0 to every metric), padded candidate rows are sliced off,
-and padded reference rows are masked *inside* the kernels via the global
-column index (closured static true size).
+and padded reference rows are masked *inside* the kernels via a per-reference
+validity mask streamed in as a kernel input. The mask generalizes the old
+static ``col < r_true`` predicate: the ragged multi-query engine reuses the
+same kernels with arbitrary validity patterns (padded arms of short queries),
+while the dense wrappers pass the prefix mask and get bit-identical results.
 """
 from __future__ import annotations
 
@@ -121,11 +124,13 @@ def l1_pairwise(x: jnp.ndarray, y: jnp.ndarray, *,
 
 
 # --------------------------------------------------------------------------
-# fused ℓ1 centrality kernel: S[c] = sum_{r < r_true} sum_d |X[c,d] - Y[r,d]|
-# Never materializes the (C, R) matrix in HBM.
+# fused ℓ1 centrality kernel: S[c] = sum_{r valid} sum_d |X[c,d] - Y[r,d]|
+# Never materializes the (C, R) matrix in HBM. Validity is a streamed (R, 1)
+# f32 mask (1.0 = count this reference), which covers both block padding and
+# the ragged engine's invalid (padded-arm) references.
 # --------------------------------------------------------------------------
 
-def _l1_centrality_kernel(x_ref, y_ref, o_ref, *, r_true: int):
+def _l1_centrality_kernel(x_ref, y_ref, m_ref, o_ref):
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -135,45 +140,52 @@ def _l1_centrality_kernel(x_ref, y_ref, o_ref, *, r_true: int):
 
     x = x_ref[...].astype(jnp.float32)   # (BC, BD)
     y = y_ref[...].astype(jnp.float32)   # (BR, BD)
-    # mask padded reference rows by global row index
-    col = j * BR + jax.lax.broadcasted_iota(jnp.int32, (BR, 1), 0)
-    mask = (col < r_true).astype(jnp.float32)          # (BR, 1)
-    acc = jnp.zeros_like(o_ref)                        # (BC, 1)
+    mask = m_ref[...]                    # (BR, 1) validity of this ref tile
+    acc = jnp.zeros_like(o_ref)          # (BC, 1)
     for c0 in range(0, BD, L1_CHUNK):
         xs = x[:, c0:c0 + L1_CHUNK]
         ys = y[:, c0:c0 + L1_CHUNK]
         a = jnp.abs(xs[:, None, :] - ys[None, :, :])   # (BC, BR, CHUNK)
-        # padded reference rows must not count: mask the whole (r) slice
+        # invalid reference rows must not count: mask the whole (r) slice
         a = a * mask[None, :, :]
         acc += jnp.sum(a, axis=(1, 2), keepdims=False)[:, None]
     o_ref[...] += acc
 
 
 def l1_centrality(x: jnp.ndarray, y: jnp.ndarray, r_true: int, *,
+                  ref_mask: jnp.ndarray | None = None,
                   interpret: bool = False) -> jnp.ndarray:
-    """Row sums of |X - Y| distances over the first ``r_true`` rows of Y.
+    """Row sums of |X - Y| distances over the valid rows of Y.
 
     x: (C, d), y: (R, d) padded; returns (C, 1) f32 sums (not yet divided).
+    By default the first ``r_true`` rows are valid; ``ref_mask`` (any shape
+    broadcastable to (R,), nonzero = valid, already combined with the padding
+    prefix by the caller or here) overrides the prefix predicate.
     """
     c, d = x.shape
     r, _ = y.shape
+    if ref_mask is None:
+        mask = (jnp.arange(r) < r_true).astype(jnp.float32)
+    else:
+        mask = ref_mask.reshape(-1).astype(jnp.float32)
+        mask = mask * (jnp.arange(r) < r_true).astype(jnp.float32)
     grid = (c // BC, r // BR, d // BD)
-    kern = functools.partial(_l1_centrality_kernel, r_true=r_true)
     return pl.pallas_call(
-        kern,
+        _l1_centrality_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BC, BD), lambda i, j, k: (i, k)),
             pl.BlockSpec((BR, BD), lambda i, j, k: (j, k)),
+            pl.BlockSpec((BR, 1), lambda i, j, k: (j, 0)),
         ],
         out_specs=pl.BlockSpec((BC, 1), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c, 1), jnp.float32),
         interpret=interpret,
-    )(x, y)
+    )(x, y, mask.reshape(r, 1))
 
 
 # --------------------------------------------------------------------------
-# fused dot-centrality kernel (MXU): S[c] = sum_{r < r_true} d(X[c], Y[r])
+# fused dot-centrality kernel (MXU): S[c] = sum_{r valid} d(X[c], Y[r])
 # for the Gram-trick metrics. The (BC, BR) distance tile lives only in a VMEM
 # scratch accumulator — the (C, R) block is never materialized in HBM, which
 # makes every metric's round memory-roofline-optimal, not just ℓ1.
@@ -181,12 +193,13 @@ def l1_centrality(x: jnp.ndarray, y: jnp.ndarray, r_true: int, *,
 # The d-axis (grid dim k, innermost) accumulates raw inner products into the
 # scratch tile; at the last k step the metric's elementwise transform
 # (sql2 / l2 / cosine) is applied to the *complete* Gram tile — sqrt does not
-# commute with the d-reduction, hence the scratch carry — padded reference
-# rows are masked by global row index, and the row-sum folds into o_ref.
+# commute with the d-reduction, hence the scratch carry — invalid reference
+# rows (block padding or ragged-query padded arms) are zeroed by the streamed
+# (1, R) validity mask, and the row-sum folds into o_ref.
 # --------------------------------------------------------------------------
 
-def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, o_ref, acc_ref, *,
-                           metric: str, r_true: int, nk: int):
+def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, m_ref, o_ref,
+                           acc_ref, *, metric: str, nk: int):
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -212,28 +225,34 @@ def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, o_ref, acc_ref, *,
         else:
             sq = jnp.maximum(xn_ref[...] + yn_ref[...] - 2.0 * g, 0.0)
             v = jnp.sqrt(sq) if metric == "l2" else sq
-        col = j * BR + jax.lax.broadcasted_iota(jnp.int32, (1, BR), 1)
-        v = v * (col < r_true).astype(jnp.float32)         # mask padded refs
+        v = v * m_ref[...]                                 # mask invalid refs
         o_ref[...] += jnp.sum(v, axis=1, keepdims=True)    # (BC, 1)
 
 
 def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
                    yn2: jnp.ndarray, r_true: int, *, metric: str,
+                   ref_mask: jnp.ndarray | None = None,
                    interpret: bool = False) -> jnp.ndarray:
-    """Row sums of ``d(X, Y)`` over the first ``r_true`` rows of Y for the
-    MXU metrics, fused past the Gram stage.
+    """Row sums of ``d(X, Y)`` over the valid rows of Y for the MXU metrics,
+    fused past the Gram stage.
 
     x: (C, d), y: (R, d) padded to block multiples; xn2: (C, 1), yn2: (1, R)
     squared row norms (ignored for cosine — pass zeros and pre-normalized
-    x/y). Returns (C, 1) f32 distance sums (not yet divided by r_true).
+    x/y). By default the first ``r_true`` rows of Y are valid; ``ref_mask``
+    (broadcastable to (R,), nonzero = valid) further restricts them — the
+    ragged engine passes the per-draw arm-validity mask here. Returns (C, 1)
+    f32 distance sums (not yet divided by the valid count).
     """
     if metric not in ("l2", "sql2", "cosine"):
         raise ValueError(f"dot_centrality does not support metric {metric!r}")
     c, d = x.shape
     r, _ = y.shape
+    mask = (jnp.arange(r) < r_true).astype(jnp.float32)
+    if ref_mask is not None:
+        mask = mask * ref_mask.reshape(-1).astype(jnp.float32)
     grid = (c // BC, r // BR, d // BD)
     kern = functools.partial(_dot_centrality_kernel, metric=metric,
-                             r_true=r_true, nk=d // BD)
+                             nk=d // BD)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -242,9 +261,10 @@ def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
             pl.BlockSpec((BR, BD), lambda i, j, k: (j, k)),
             pl.BlockSpec((BC, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((1, BR), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, BR), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((BC, 1), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((BC, BR), jnp.float32)],
         interpret=interpret,
-    )(x, y, xn2, yn2)
+    )(x, y, xn2, yn2, mask.reshape(1, r))

@@ -1,0 +1,256 @@
+"""Continuous-batching medoid service over the ragged multi-query engine.
+
+The medoid analogue of :mod:`repro.launch.serve`'s admit/step loop: clients
+submit independent medoid queries (a ``(n, d)`` candidate set each, arbitrary
+``n`` per request); the scheduler coalesces queued requests into power-of-two
+shape buckets (:mod:`repro.core.bucketing`), pads each group to a fixed slot
+count, and answers a whole bucket in one dispatch of
+:func:`repro.core.corr_sh.corr_sh_medoid_ragged`. Because every dispatch has
+the same static signature per bucket — ``(max_batch, n_bucket, d)`` with a
+bucket-derived budget — the engine compiles at most one XLA program per
+distinct bucket no matter how traffic is shaped, and the compile odometer
+(``ragged_compile_count``) lets tests and benchmarks assert exactly that.
+
+Per-request accounting mirrors a serving stack: queue-wait steps, batch wall
+time, and the schedule's pull count (distance evaluations) for the bucket the
+request rode in.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve_medoid --requests 24 \
+      --n-min 16 --n-max 700 --d 32 --backend pallas_fused
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_backend, list_backends, round_schedule, schedule_pulls
+from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n, pack_queries
+from repro.core.corr_sh import corr_sh_medoid_ragged, ragged_compile_count
+from repro.core.distances import METRICS
+
+
+@dataclasses.dataclass
+class MedoidRequest:
+    """One queued medoid query and, once answered, its result + accounting."""
+    rid: int
+    data: jnp.ndarray                  # (n, d) candidate set
+    submit_step: int
+    medoid: Optional[int] = None       # index < n once answered
+    wait_steps: int = 0                # scheduler steps spent queued
+    batch_wall_s: float = 0.0          # wall time of the dispatch it rode in
+    pulls: int = 0                     # scheduled distance evals of that dispatch
+
+    @property
+    def n(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.medoid is not None
+
+
+class MedoidServer:
+    """Continuous-batching medoid server (admit / step / drain).
+
+    One ``step()`` services the *oldest* bucket group: all queued requests
+    sharing the head-of-queue request's ``(n_bucket, d)`` signature, up to
+    ``max_batch`` of them, dispatched as one ragged batch padded to exactly
+    ``max_batch`` slots (dummy length-1 queries fill the tail, so group size
+    never changes the compiled signature). Remaining requests wait for the
+    next step — FIFO across buckets, batched within a bucket.
+    """
+
+    def __init__(self, *, metric: str = "l2", backend: str = "reference",
+                 budget_per_arm: int = 24, max_batch: int = 8,
+                 min_bucket: int = DEFAULT_MIN_BUCKET, seed: int = 0):
+        if metric not in METRICS:
+            raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
+        get_backend(backend)      # fail at construction, not mid-dispatch
+        self.metric = metric
+        self.backend = backend
+        self.budget_per_arm = budget_per_arm
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.queue: list[MedoidRequest] = []
+        self.done: dict[int, MedoidRequest] = {}
+        self.dispatches = 0
+        self.buckets_seen: set[tuple[int, int]] = set()   # (n_bucket, d)
+        self._step = 0
+        self._next_rid = 0
+        self._key = jax.random.key(seed)
+        self._recompiles = 0
+
+    # ------------------------------- admission ----------------------------
+    def submit(self, data: jnp.ndarray, rid: Optional[int] = None) -> int:
+        """Queue one (n, d) query; returns its request id. Rejects empty or
+        mis-shaped queries at admission (never mid-dispatch)."""
+        data = jnp.asarray(data)
+        if data.ndim != 2:
+            raise ValueError(f"query must be (n, d), got shape {data.shape}")
+        if data.shape[0] < 1:
+            raise ValueError("all-padding query rejected: n must be >= 1")
+        if rid is None:
+            rid = self._next_rid
+        if rid in self.done or any(q.rid == rid for q in self.queue):
+            raise ValueError(f"duplicate request id {rid}")
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(MedoidRequest(rid=rid, data=data,
+                                        submit_step=self._step))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------ scheduling ----------------------------
+    def _bucket_key(self, req: MedoidRequest) -> tuple[int, int]:
+        return (bucket_n(req.n, self.min_bucket), int(req.data.shape[1]))
+
+    def step(self) -> list[MedoidRequest]:
+        """Service the oldest bucket group; returns the answered requests."""
+        self._step += 1
+        if not self.queue:
+            return []
+        bkey = self._bucket_key(self.queue[0])
+        batch: list[MedoidRequest] = []
+        rest: list[MedoidRequest] = []
+        for q in self.queue:
+            if len(batch) < self.max_batch and self._bucket_key(q) == bkey:
+                batch.append(q)
+            else:
+                rest.append(q)
+        self.queue = rest
+        n_bucket, _ = bkey
+
+        # (max_batch, n_bucket, d) with dummy length-1 tail slots: group size
+        # never changes the compiled signature
+        data, lengths = pack_queries([q.data for q in batch],
+                                     min_bucket=self.min_bucket,
+                                     pad_batch_to=self.max_batch)
+        budget = self.budget_per_arm * n_bucket
+        self._key, sub = jax.random.split(self._key)
+
+        compiles0 = ragged_compile_count()
+        t0 = time.time()
+        try:
+            medoids = corr_sh_medoid_ragged(
+                data, lengths, sub, budget=budget, metric=self.metric,
+                backend=self.backend, min_bucket=self.min_bucket)
+            medoids = [int(m) for m in medoids]      # block until ready
+        except Exception:
+            # dispatch failed: requests go back to the head of the queue so
+            # nothing is ever lost between `queue` and `done`
+            self.queue = batch + self.queue
+            raise
+        wall = time.time() - t0
+        self._recompiles += ragged_compile_count() - compiles0
+
+        pulls = schedule_pulls(n_bucket, budget)
+        self.dispatches += 1
+        self.buckets_seen.add(bkey)
+        for slot, q in enumerate(batch):
+            q.medoid = medoids[slot]
+            q.wait_steps = self._step - q.submit_step - 1
+            q.batch_wall_s = round(wall, 4)
+            q.pulls = pulls
+            self.done[q.rid] = q
+        return batch
+
+    def drain(self) -> dict[int, MedoidRequest]:
+        """Step until the queue is empty; returns all answered requests."""
+        while self.queue:
+            self.step()
+        return self.done
+
+    # ------------------------------- telemetry ----------------------------
+    @property
+    def recompiles(self) -> int:
+        """XLA programs the ragged engine traced during THIS server's
+        dispatches (<= len(buckets_seen) by construction of the fixed
+        dispatch shape; a cache warmed by another server only lowers it)."""
+        return self._recompiles
+
+    def stats(self) -> dict:
+        lat = [q.wait_steps for q in self.done.values()]
+        return {
+            "answered": len(self.done),
+            "pending": len(self.queue),
+            "dispatches": self.dispatches,
+            "distinct_buckets": len(self.buckets_seen),
+            "recompiles": self.recompiles,
+            "mean_wait_steps": round(sum(lat) / len(lat), 2) if lat else 0.0,
+            "max_wait_steps": max(lat) if lat else 0,
+            "total_pulls": sum(q.pulls for q in self.done.values()),
+            "backend": self.backend,
+            "metric": self.metric,
+        }
+
+
+def synthetic_trace(num: int, n_lo: int, n_hi: int, d: int,
+                    seed: int = 0) -> list[jnp.ndarray]:
+    """A mixed-size query stream: log-uniform n in [n_lo, n_hi]."""
+    key = jax.random.key(seed)
+    out = []
+    for i in range(num):
+        u = float(jax.random.uniform(jax.random.fold_in(key, 2 * i)))
+        n = max(n_lo, min(n_hi, round(math.exp(
+            math.log(n_lo) + u * (math.log(n_hi) - math.log(n_lo))))))
+        out.append(jax.random.normal(jax.random.fold_in(key, 2 * i + 1),
+                                     (n, d)))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--n-min", type=int, default=16)
+    ap.add_argument("--n-max", type=int, default=512)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--metric", default="l2",
+                    choices=["l1", "l2", "sql2", "cosine"])
+    ap.add_argument("--backend", default="reference",
+                    choices=list(list_backends()))
+    ap.add_argument("--budget-per-arm", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--arrivals-per-step", type=int, default=4,
+                    help="requests admitted between scheduler steps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.arrivals_per_step < 1:
+        ap.error("--arrivals-per-step must be >= 1")
+
+    srv = MedoidServer(metric=args.metric, backend=args.backend,
+                       budget_per_arm=args.budget_per_arm,
+                       max_batch=args.max_batch, seed=args.seed)
+    trace = synthetic_trace(args.requests, args.n_min, args.n_max, args.d,
+                            seed=args.seed)
+    t0 = time.time()
+    it = iter(trace)
+    admitted = 0
+    while admitted < len(trace) or srv.pending:
+        for _ in range(args.arrivals_per_step):
+            q = next(it, None)
+            if q is None:
+                break
+            srv.submit(q)
+            admitted += 1
+        srv.step()
+    out = srv.stats()
+    out["wall_s"] = round(time.time() - t0, 2)
+    out["schedules"] = {
+        str(nb): [(r.survivors, r.num_refs)
+                  for r in round_schedule(nb, args.budget_per_arm * nb)]
+        for (nb, _) in sorted(srv.buckets_seen)}
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Ragged multi-query engine: schedule properties, bucketing, and parity.
+
+The contract under test: ``corr_sh_medoid_ragged`` answers a padded
+``(B, n_max, d)`` batch with per-query ``lengths`` through ONE shared static
+schedule, yet
+
+* a query occupying its full power-of-two bucket is *bit-identical* to the
+  single-query engine run with the same derived key (masking with an
+  all-valid mask perturbs nothing), and
+* any query given an exact-regime budget recovers the true medoid — so on
+  mixed-n batches ragged and the per-query loop agree query-for-query, for
+  every registered backend.
+
+Plus the property harness for ``round_schedule`` (the satellite of this PR):
+pull ceiling, halving-to-one, exact-flag characterization, budget
+monotonicity — deterministic fallback sweeps when hypothesis is absent
+(see ``tests/_hypothesis_compat.py``).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (METRICS, bucket_n, corr_sh_medoid,
+                        corr_sh_medoid_ragged, exact_medoid, get_backend,
+                        list_backends, num_buckets_for_range, pack_queries,
+                        pairwise, plan_buckets, round_schedule, schedule_pulls)
+
+pytestmark = pytest.mark.ragged
+
+BACKENDS = list_backends()
+
+
+# ------------------------- round_schedule properties ------------------------
+
+@given(n=st.integers(2, 5000), per_arm=st.integers(1, 200))
+@settings(max_examples=200, deadline=None)
+def test_schedule_pull_ceiling(n, per_arm):
+    """Pulls never exceed budget + n * ceil(log2 n): the t_r >= 1 floor costs
+    at most s_r extra pulls per round, summed over <= ceil(log2 n) rounds."""
+    budget = per_arm * n
+    log2n = max(1, math.ceil(math.log2(n)))
+    assert schedule_pulls(n, budget) <= budget + n * log2n
+
+
+@given(n=st.integers(2, 5000), per_arm=st.integers(1, 200))
+@settings(max_examples=100, deadline=None)
+def test_schedule_survivors_halve_to_one(n, per_arm):
+    rounds = round_schedule(n, per_arm * n)
+    assert rounds[0].survivors == n
+    for a, b in zip(rounds, rounds[1:]):
+        assert b.survivors == math.ceil(a.survivors / 2)
+    # termination: either an exact round, or the halving chain reached the
+    # point where one more halving leaves a single survivor
+    last = rounds[-1]
+    assert last.exact or math.ceil(last.survivors / 2) == 1
+
+
+@given(n=st.integers(2, 5000), per_arm=st.integers(1, 400))
+@settings(max_examples=100, deadline=None)
+def test_schedule_exact_flag_iff_refs_cover_n(n, per_arm):
+    rounds = round_schedule(n, per_arm * n)
+    for r in rounds:
+        assert r.exact == (r.num_refs >= n)
+    # an exact round ends the schedule immediately
+    for r in rounds[:-1]:
+        assert not r.exact
+
+
+@given(n=st.integers(2, 2000), per_arm=st.integers(1, 100),
+       extra=st.integers(0, 5000))
+@settings(max_examples=100, deadline=None)
+def test_schedule_monotone_in_budget(n, per_arm, extra):
+    """More budget never shrinks a round's reference draw, and never adds
+    rounds (exactness can only trigger earlier)."""
+    lo = round_schedule(n, per_arm * n)
+    hi = round_schedule(n, per_arm * n + extra)
+    assert len(hi) <= len(lo)
+    for a, b in zip(lo, hi):
+        assert a.survivors == b.survivors
+        assert b.num_refs >= a.num_refs
+
+
+# -------------------------------- bucketing ---------------------------------
+
+@given(n=st.integers(1, 100000))
+@settings(max_examples=100, deadline=None)
+def test_bucket_n_properties(n):
+    b = bucket_n(n)
+    assert b >= n and b >= 8
+    assert b & (b - 1) == 0                       # power of two
+    assert bucket_n(b) == b                        # idempotent on buckets
+    if b > 8:
+        assert b < 2 * n                           # never more than 2x waste
+
+
+def test_plan_buckets_groups_and_order():
+    plan = plan_buckets([3, 100, 64, 7, 257, 65])
+    assert plan == {8: [0, 3], 128: [1, 5], 64: [2], 512: [4]}
+    assert list(plan) == [8, 128, 64, 512]         # first-arrival order
+
+
+def test_num_buckets_for_range():
+    assert num_buckets_for_range(64, 64) == 1
+    assert num_buckets_for_range(64, 1024) == 5    # 64,128,256,512,1024
+    assert num_buckets_for_range(1, 8) == 1        # floor bucket
+
+
+def test_pack_queries_shapes_and_validation():
+    qs = [jnp.ones((3, 4)), jnp.ones((17, 4))]
+    data, lengths = pack_queries(qs)
+    assert data.shape == (2, 32, 4)
+    assert lengths.tolist() == [3, 17]
+    data, lengths = pack_queries(qs, pad_batch_to=4)
+    assert data.shape == (4, 32, 4)
+    assert lengths.tolist() == [3, 17, 1, 1]
+    with pytest.raises(ValueError, match="at least one"):
+        pack_queries([])
+    with pytest.raises(ValueError, match="must be"):
+        pack_queries([jnp.ones((3, 4)), jnp.ones((3, 5))])
+
+
+# ------------------------ masked centrality primitive -----------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_centrality_ref_mask_parity(backend, metric):
+    """Every backend's centrality with a validity mask == the masked row sum
+    of the reference pairwise block (invalid references contribute zero)."""
+    k = jax.random.key(3)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (37, 12))
+    y = jax.random.normal(jax.random.fold_in(k, 2), (23, 12))
+    mask = (jax.random.uniform(jax.random.fold_in(k, 3), (23,)) < 0.6)
+    got = get_backend(backend).centrality_sums(metric)(x, y, ref_mask=mask)
+    want = jnp.sum(pairwise(metric)(x, y) * mask[None, :], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=5e-3 * 23)
+
+
+# ------------------------------ engine parity -------------------------------
+
+def _queries(ns, d, seed=0):
+    k = jax.random.key(seed)
+    return [jax.random.normal(jax.random.fold_in(k, i), (n, d))
+            for i, n in enumerate(ns)]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_bucket_parity_is_bitexact(backend):
+    """lengths == n_bucket: the masked engine IS the dense engine — same
+    schedule, same reference permutations, same arithmetic, same medoids,
+    in the *halving* regime (no exact-round crutch)."""
+    b, n, d = 3, 64, 12
+    data = jax.random.normal(jax.random.key(6), (b, n, d))
+    key = jax.random.key(8)
+    got = corr_sh_medoid_ragged(data, [n] * b, key, budget=n * 20,
+                                backend=backend)
+    keys = jax.random.split(key, b)
+    want = [int(corr_sh_medoid(data[i], keys[i], budget=n * 20,
+                               backend=backend)) for i in range(b)]
+    assert [int(m) for m in got] == want
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mixed_n_parity_vs_per_query_loop(backend):
+    """The acceptance batch: n in {64, 257, 1024} through one bucketed
+    dispatch equals the per-query loop for every backend (exact-regime
+    budget: both sides provably return the true medoid)."""
+    ns = (64, 257, 1024)
+    qs = _queries(ns, d=6, seed=1)
+    data, lengths = pack_queries(qs)
+    assert data.shape[1] == 1024
+    budget = 1024 * 10 * 1024          # t_0 == n_bucket: exact first round
+    key = jax.random.key(5)
+    got = corr_sh_medoid_ragged(data, lengths, key, budget=budget,
+                                backend=backend)
+    keys = jax.random.split(key, len(qs))
+    singles = [int(corr_sh_medoid(qs[i], keys[i], budget=budget,
+                                  backend=backend)) for i in range(len(qs))]
+    exact = [int(exact_medoid(q, "l2")) for q in qs]
+    assert [int(m) for m in got] == singles == exact
+
+
+@pytest.mark.parametrize("metric", ["l1", "cosine"])
+def test_mixed_n_parity_other_metrics(metric):
+    qs = _queries((5, 33, 64), d=8, seed=2)
+    data, lengths = pack_queries(qs)
+    budget = 64 * 7 * 64
+    key = jax.random.key(9)
+    got = corr_sh_medoid_ragged(data, lengths, key, budget=budget,
+                                metric=metric, backend="pallas_fused")
+    assert [int(m) for m in got] == [int(exact_medoid(q, metric)) for q in qs]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_edge_queries_n1_n2(backend):
+    """n=1 and n=2 queries ride the same bucket as bigger neighbors."""
+    qs = _queries((1, 2, 5), d=4, seed=3)
+    data, lengths = pack_queries(qs)
+    assert data.shape[1] == 8                      # floor bucket
+    key = jax.random.key(4)
+    got = corr_sh_medoid_ragged(data, lengths, key, budget=8 * 3 * 8,
+                                backend=backend)
+    keys = jax.random.split(key, 3)
+    singles = [int(corr_sh_medoid(qs[i], keys[i], budget=8 * 3 * 8,
+                                  backend=backend)) for i in range(3)]
+    assert [int(m) for m in got] == singles
+    for m, n in zip(got, (1, 2, 5)):
+        assert 0 <= int(m) < n                     # never a padded arm
+
+
+def test_all_padding_rejected():
+    data = jnp.zeros((3, 8, 4))
+    with pytest.raises(ValueError, match="all-padding"):
+        corr_sh_medoid_ragged(data, [2, 0, 5], jax.random.key(0), budget=100)
+    with pytest.raises(ValueError, match="exceeds"):
+        corr_sh_medoid_ragged(data, [2, 9, 5], jax.random.key(0), budget=100)
+    with pytest.raises(ValueError, match="expected"):
+        corr_sh_medoid_ragged(jnp.zeros((8, 4)), [8], jax.random.key(0),
+                              budget=100)
+    with pytest.raises(ValueError, match="lengths"):
+        corr_sh_medoid_ragged(data, [2, 5], jax.random.key(0), budget=100)
+
+
+def test_raw_nmax_never_reaches_the_jit_cache():
+    """Two raw paddings in the same bucket share one compiled program: the
+    wrapper bucket-pads BEFORE the jit boundary, so the compile cap holds
+    for callers that don't pre-pad (regression for padding inside the jit)."""
+    from repro.core import ragged_compile_count
+
+    key = jax.random.key(0)
+    qs = _queries((70, 90), d=4, seed=8)   # both bucket to 128
+    c0 = ragged_compile_count()
+    a = corr_sh_medoid_ragged(qs[0][None], [70], key, budget=128 * 8)
+    b = corr_sh_medoid_ragged(qs[1][None], [90], key, budget=128 * 8)
+    assert ragged_compile_count() - c0 <= 1
+    assert 0 <= int(a[0]) < 70 and 0 <= int(b[0]) < 90
+
+
+def test_ragged_deterministic_same_key():
+    qs = _queries((9, 33, 64, 2), d=8, seed=7)
+    data, lengths = pack_queries(qs)
+    a = corr_sh_medoid_ragged(data, lengths, jax.random.key(11), budget=64 * 12)
+    b = corr_sh_medoid_ragged(data, lengths, jax.random.key(11), budget=64 * 12)
+    assert [int(x) for x in a] == [int(x) for x in b]

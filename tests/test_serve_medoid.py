@@ -1,0 +1,117 @@
+"""Service-level tests for the continuous-batching medoid server.
+
+Invariants under a synthetic mixed-size trace:
+
+* liveness/uniqueness — every submitted request is answered exactly once,
+  with a medoid index inside its own query (never a padded arm or a dummy
+  batch slot);
+* compile discipline — the ragged engine traces at most one XLA program per
+  distinct (n_bucket, d) the trace touches, because every dispatch of a
+  bucket has the identical static signature (fixed max_batch slots,
+  bucket-derived budget);
+* admission — empty queries and duplicate request ids are rejected at
+  submit(), never mid-dispatch.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import exact_medoid
+from repro.core.bucketing import bucket_n
+from repro.launch.serve_medoid import MedoidServer, synthetic_trace
+
+pytestmark = pytest.mark.ragged
+
+
+def _trace(ns, d=8, seed=0):
+    k = jax.random.key(seed)
+    return [jax.random.normal(jax.random.fold_in(k, i), (n, d))
+            for i, n in enumerate(ns)]
+
+
+def test_every_request_answered_exactly_once_and_compiles_bounded():
+    ns = [3, 100, 64, 7, 257, 65, 64, 12, 300, 1, 80, 33, 2]
+    queries = _trace(ns)
+    srv = MedoidServer(budget_per_arm=8, max_batch=4)
+    rids = []
+    # staggered arrivals: a few requests admitted between scheduler steps
+    it = iter(queries)
+    admitted = 0
+    while admitted < len(queries) or srv.pending:
+        for _ in range(3):
+            q = next(it, None)
+            if q is not None:
+                rids.append(srv.submit(q))
+                admitted += 1
+        answered = srv.step()
+        for req in answered:
+            assert req.done and 0 <= req.medoid < req.n
+
+    assert sorted(srv.done) == sorted(rids) and len(rids) == len(ns)
+    assert len(set(rids)) == len(rids)
+    # dummy padding slots never surface as answers
+    assert len(srv.done) == len(ns)
+    # one compiled program per distinct bucket, at most
+    distinct_buckets = {bucket_n(n) for n in ns}
+    assert srv.stats()["distinct_buckets"] == len(distinct_buckets)
+    assert srv.recompiles <= len(distinct_buckets)
+
+
+def test_answers_match_exact_medoid_with_generous_budget():
+    ns = [5, 17, 30, 9, 64]
+    queries = _trace(ns, d=6, seed=4)
+    # budget_per_arm >= n_bucket * ceil(log2 n_bucket): first round exact
+    srv = MedoidServer(budget_per_arm=64 * 6, max_batch=3)
+    rids = [srv.submit(q) for q in queries]
+    srv.drain()
+    for rid, q in zip(rids, queries):
+        assert srv.done[rid].medoid == int(exact_medoid(q, "l2"))
+
+
+def test_fifo_within_bucket_and_batched_dispatch():
+    # 5 same-bucket queries, max_batch=2 -> 3 dispatches, oldest first
+    queries = _trace([30, 20, 25, 31, 17], seed=2)
+    srv = MedoidServer(budget_per_arm=8, max_batch=2)
+    rids = [srv.submit(q) for q in queries]
+    first = srv.step()
+    assert [r.rid for r in first] == rids[:2]
+    srv.drain()
+    assert srv.dispatches == 3
+    assert srv.stats()["distinct_buckets"] == 1
+
+
+def test_admission_rejections():
+    # misconfiguration fails at construction, never mid-dispatch (a dispatch
+    # failure would otherwise have to re-queue the batch)
+    with pytest.raises(ValueError, match="unknown backend"):
+        MedoidServer(backend="pallas_fuse")
+    with pytest.raises(ValueError, match="unknown metric"):
+        MedoidServer(metric="euclid")
+    srv = MedoidServer()
+    with pytest.raises(ValueError, match="all-padding"):
+        srv.submit(jnp.zeros((0, 4)))
+    with pytest.raises(ValueError, match="\\(n, d\\)"):
+        srv.submit(jnp.zeros((4,)))
+    rid = srv.submit(jnp.zeros((3, 4)))
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(jnp.zeros((5, 4)), rid=rid)
+
+
+def test_request_accounting():
+    srv = MedoidServer(budget_per_arm=8, max_batch=2)
+    srv.submit(_trace([12], seed=5)[0])
+    srv.submit(_trace([40], seed=6)[0])   # different bucket: waits one step
+    srv.step()
+    assert srv.pending == 1
+    srv.step()
+    assert srv.pending == 0
+    reqs = sorted(srv.done.values(), key=lambda r: r.rid)
+    assert reqs[0].wait_steps == 0 and reqs[1].wait_steps == 1
+    assert all(r.pulls > 0 and r.batch_wall_s >= 0 for r in reqs)
+
+
+def test_synthetic_trace_shapes():
+    tr = synthetic_trace(6, 4, 100, 8, seed=1)
+    assert len(tr) == 6
+    assert all(t.ndim == 2 and 4 <= t.shape[0] <= 100 and t.shape[1] == 8
+               for t in tr)
