@@ -1,0 +1,85 @@
+"""k-medoids: bandit (correlated-SH) pulls vs exact PAM.
+
+Two cells:
+
+* a **head-to-head** at a size where exact PAM actually runs in seconds
+  (``n_small``): both algorithms on the same planted rnaseq-like data,
+  reporting ARI, cost ratio, and measured pull counts; and
+* the **acceptance cell** at ``n_big`` (CI scale 4096): the bandit pipeline
+  runs for real; exact PAM's pull count needs no run — it is ``n^2`` by
+  construction (the full distance matrix) — so the >= 10x pull gap and the
+  ARI >= 0.95 recovery are asserted right here, mirroring
+  ``tests/test_kmedoids.py``.
+
+Rows carry a ``pulls`` field so ``run.py`` surfaces them in
+``BENCH_cluster.json`` — the cross-PR perf trajectory for the clustering
+workload.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.cluster import (adjusted_rand_index, bandit_kmedoids, pam_exact,
+                           pam_pulls)
+from repro.data.medoid_datasets import rnaseq_clusters
+
+
+def run(n_small: int = 512, n_big: int = 4096, d: int = 64, k: int = 8,
+        backend: str = "reference", seed: int = 0) -> list[dict]:
+    rows = []
+    key = jax.random.key(seed)
+
+    # ---- head-to-head at exact-PAM-feasible scale ----
+    data, labels = rnaseq_clusters(jax.random.fold_in(key, 1), n_small, d, k)
+    t0 = time.time()
+    res = bandit_kmedoids(data, k, jax.random.fold_in(key, 2), metric="l1",
+                          backend=backend)
+    t_bandit = time.time() - t0
+    t0 = time.time()
+    pam = pam_exact(data, k, "l1")
+    t_pam = time.time() - t0
+    rows.append({
+        "name": f"kmedoids_bandit_{backend}_n{n_small}k{k}",
+        "us_per_call": round(t_bandit * 1e6, 1),
+        "pulls": res.pulls,
+        "derived": (f"ari={adjusted_rand_index(res.labels, labels):.3f} "
+                    f"cost_vs_pam={res.cost / pam.cost:.4f} "
+                    f"swaps={res.swaps}"),
+    })
+    rows.append({
+        "name": f"kmedoids_pam_exact_n{n_small}k{k}",
+        "us_per_call": round(t_pam * 1e6, 1),
+        "pulls": pam.pulls,
+        "derived": (f"ari={adjusted_rand_index(pam.labels, labels):.3f} "
+                    f"pull_ratio={pam.pulls / res.pulls:.1f}"),
+    })
+
+    # ---- acceptance cell: CI-scale bandit run vs PAM's n^2 pulls ----
+    data, labels = rnaseq_clusters(jax.random.fold_in(key, 3), n_big, d, k)
+    t0 = time.time()
+    res = bandit_kmedoids(data, k, jax.random.fold_in(key, 4), metric="l1",
+                          backend=backend)
+    t_bandit = time.time() - t0
+    ari = adjusted_rand_index(res.labels, labels)
+    ratio = pam_pulls(n_big) / res.pulls
+    assert ari >= 0.95, f"planted-cluster recovery ARI {ari:.3f} < 0.95"
+    assert ratio >= 10.0, (
+        f"bandit k-medoids used {res.pulls} pulls vs exact PAM's "
+        f"{pam_pulls(n_big)} — ratio {ratio:.1f} < 10x")
+    rows.append({
+        "name": f"kmedoids_bandit_{backend}_n{n_big}k{k}",
+        "us_per_call": round(t_bandit * 1e6, 1),
+        "pulls": res.pulls,
+        "derived": (f"ari={ari:.3f} pam_pulls={pam_pulls(n_big)} "
+                    f"pull_ratio={ratio:.1f} swaps={res.swaps} "
+                    f"build={res.build_pulls} refine={res.refine_pulls} "
+                    f"swap={res.swap_pulls}"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")

@@ -1,27 +1,48 @@
 """Benchmark driver — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (the scaffold contract), one
-section per benchmark. Scale knobs are CI-sized; pass --full for paper-scale.
+section per benchmark, and writes each section's rows as machine-readable
+``BENCH_<section>.json`` (``--out-dir``, default cwd) so the perf trajectory
+is tracked across PRs. Scale knobs are CI-sized; pass --full for paper-scale.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 
+def _normalize(r: dict) -> dict:
+    """One canonical row: name, us_per_call, optional pulls, derived."""
+    name = r.get("name") or "_".join(
+        str(r.get(k)) for k in ("dataset", "algo", "arm", "pulls_per_arm")
+        if r.get(k) is not None)
+    # NB: `sec == 0.0` is a legitimate value — test membership, never truth
+    # (`r.get("sec", 0) and ...` used to short-circuit to 0 and print an
+    # empty/zero us_per_call for instant calls).
+    if "us_per_call" in r:
+        us = r["us_per_call"]
+    elif "sec" in r:
+        us = r["sec"] * 1e6
+    else:
+        us = ""
+    derived = r.get("derived") or json.dumps(
+        {k: v for k, v in r.items()
+         if k not in ("name", "us_per_call", "sec", "dataset", "algo")})
+    out = {"name": name, "us_per_call": us, "derived": derived}
+    if "pulls" in r:
+        out["pulls"] = r["pulls"]
+    return out
+
+
 def _emit(rows):
-    for r in rows:
-        name = r.get("name") or "_".join(
-            str(r.get(k)) for k in ("dataset", "algo", "arm", "pulls_per_arm")
-            if r.get(k) is not None)
-        us = r.get("us_per_call", r.get("sec", 0) and r["sec"] * 1e6)
-        derived = r.get("derived") or json.dumps(
-            {k: v for k, v in r.items()
-             if k not in ("name", "us_per_call", "sec", "dataset", "algo")})
-        print(f"{name},{us},{derived!r}")
+    normalized = [_normalize(r) for r in rows]
+    for r in normalized:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")
         sys.stdout.flush()
+    return normalized
 
 
 def main() -> None:
@@ -30,11 +51,14 @@ def main() -> None:
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
                     choices=[None, "algorithms", "curves", "correlation",
-                             "kernels", "backends", "ragged", "roofline"])
+                             "kernels", "backends", "ragged", "cluster",
+                             "roofline"])
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<section>.json files are written")
     args = ap.parse_args()
     scale = 2 if args.full else 1
 
-    from benchmarks import (bench_algorithms, bench_backends,
+    from benchmarks import (bench_algorithms, bench_backends, bench_cluster,
                             bench_correlation, bench_error_curves,
                             bench_kernels, bench_ragged, roofline_table)
 
@@ -50,6 +74,8 @@ def main() -> None:
             grid=((512 * scale, 64 * scale), (1024 * scale, 128 * scale))),
         "ragged": lambda: bench_ragged.run(
             ns=(64, 257, 1024), d=16 * scale),
+        "cluster": lambda: bench_cluster.run(
+            n_small=512, n_big=4096, d=64 * scale),
         "roofline": lambda: roofline_table.run(
             ("results_dryrun_16x16.jsonl", "results_dryrun_2x16x16.jsonl")),
     }
@@ -58,8 +84,12 @@ def main() -> None:
             continue
         print(f"# === {name} ===")
         t0 = time.time()
-        _emit(fn())
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        rows = _emit(fn())
+        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# {name} done in {time.time() - t0:.1f}s "
+              f"({path})", file=sys.stderr)
 
 
 if __name__ == "__main__":

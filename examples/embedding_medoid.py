@@ -54,6 +54,9 @@ def main():
     ap.add_argument("--queries", type=int, default=1,
                     help="split the corpus into Q uneven shards and answer "
                          "each through the batched medoid service")
+    ap.add_argument("--cluster", type=int, default=0, metavar="K",
+                    help="bandit k-medoids over the embeddings: K "
+                         "representative sequences, one per cluster")
     ap.add_argument("--backend", default="reference")
     args = ap.parse_args()
 
@@ -94,6 +97,22 @@ def main():
           f"[{schedule_pulls(n, budget):,} pulls, {t_corr:.2f}s]")
     print(f"representative sequence (exact):  #{truth}  [{n * n:,} pulls]")
     print(f"match: {rep == truth}")
+
+    if args.cluster > 1:
+        # K representative sequences (coreset selection with coverage): bandit
+        # k-medoids over the embeddings — BUILD/SWAP on the corrSH engine,
+        # per-cluster refinement through the ragged bucketed dispatch
+        from repro.cluster import bandit_kmedoids
+
+        t0 = time.time()
+        res = bandit_kmedoids(embs, args.cluster, jax.random.key(3),
+                              metric="l2", backend=args.backend)
+        sizes = [int((res.labels == c).sum()) for c in range(args.cluster)]
+        print(f"\n{args.cluster}-medoid clustering in {time.time() - t0:.2f}s "
+              f"({res.pulls:,} pulls vs {n * n:,} exact, "
+              f"{res.swaps} swaps, cost {res.cost:.1f}):")
+        for c, (m, s) in enumerate(zip(res.medoids, sizes)):
+            print(f"  cluster {c}: representative #{m}  ({s} sequences)")
 
     if args.queries > 1:
         # per-shard representatives via the continuous-batching service:

@@ -1,0 +1,23 @@
+"""Bandit k-medoids clustering subsystem on the correlated-SH engine."""
+from repro.cluster.kmedoids import (
+    KMedoidsResult,
+    bandit_kmedoids,
+    make_direct_refiner,
+)
+from repro.cluster.metrics import adjusted_rand_index, clustering_cost
+from repro.cluster.pam_exact import (
+    PAMResult,
+    distance_matrix,
+    pam_build,
+    pam_exact,
+    pam_pulls,
+    pam_swap,
+)
+from repro.cluster.service import ServiceRefiner, kmedoids_via_service
+
+__all__ = [
+    "KMedoidsResult", "PAMResult", "ServiceRefiner", "adjusted_rand_index",
+    "bandit_kmedoids", "clustering_cost", "distance_matrix",
+    "kmedoids_via_service", "make_direct_refiner", "pam_build", "pam_exact",
+    "pam_pulls", "pam_swap",
+]

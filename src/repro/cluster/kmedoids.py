@@ -1,0 +1,360 @@
+"""Bandit k-medoids clustering on the correlated-SH engine.
+
+The paper's primitive — adaptive medoid identification in O(n log n)
+distance evaluations — is exactly the inner loop of k-medoids, which is how
+BanditPAM (Tiwari et al., NeurIPS 2020) and BanditPAM++ (2023) framed the
+clustering problem. This module builds the full pipeline out of the layers
+the repo already has, instead of re-deriving any of them:
+
+* **BUILD** (greedy seeding): k correlated-SH argmin problems. Step 0 *is*
+  the single-medoid problem and literally calls
+  :func:`repro.core.corr_sh.corr_sh_medoid` (so a k=1 BUILD is bit-identical
+  to the paper engine by construction). Steps t >= 1 run the same static
+  round schedule with the BanditPAM BUILD estimator: an arm i's value over a
+  shared reference draw J is ``sum_{j in J} min(d1_j, d(x_i, x_j))`` where
+  ``d1`` is the cached distance to the nearest already-chosen medoid — the
+  correlation trick applies unchanged because all arms share J (and the
+  ``d1_J`` gather).
+
+* **Ragged per-cluster refinement**: alternate-style sweeps. Each cluster's
+  medoid update is a pure single-medoid problem over its members, and
+  cluster sizes are heterogeneous — so the per-cluster subproblems are
+  routed through :func:`repro.core.corr_sh.corr_sh_medoid_ragged` via the
+  power-of-two bucketing planner (clusters are just another ragged traffic
+  source; the compile odometer bounds hold here too). Per-cluster caching:
+  only clusters whose membership changed since the previous sweep recompute.
+
+* **SWAP** (FasterPAM-style bandit local search): swap-in candidates are the
+  arms; one shared reference draw J yields, per candidate c, the swap deltas
+  against ALL k medoids at once from the cached nearest/second-nearest
+  distances:
+
+      delta(c, i) = sum_{j in J} min(d(c,j) - d1_j, 0)
+                  + sum_{j in J, nearest_j = i} [ min(d(c,j), d2_j) - d1_j
+                                                  - min(d(c,j) - d1_j, 0) ]
+
+  (a (C, t) block, a (t, k) one-hot segment sum — entirely on-device). The
+  arm value is ``min_i delta(c, i)`` and correlated sequential halving prunes
+  candidates round by round. The winning swap is verified with an *exact*
+  delta (one n-vector of distances) before being applied; the ``(n, k)``
+  medoid-distance cache then updates incrementally — only the swapped
+  column is recomputed, and nearest/second-nearest fall out of a top-2.
+
+Pull accounting is explicit and scheduled (never estimated), so benchmarks
+and tests can assert the O(n log n)-vs-O(n^2) gap against exact PAM
+(:mod:`repro.cluster.pam_exact`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (get_backend, plan_buckets, pack_queries,
+                        round_schedule, schedule_pulls)
+from repro.core.bucketing import DEFAULT_MIN_BUCKET, next_pow2
+from repro.core.corr_sh import (_resolve_select_fn, _sample_refs,
+                                corr_sh_medoid, corr_sh_medoid_ragged)
+
+# refiner hook: (cluster member arrays, key) -> (local medoid indices, pulls).
+# The default runs bucketed ragged dispatches in-process; the service layer
+# (repro.cluster.service) substitutes a continuous-batching MedoidServer.
+Refiner = Callable[[list, jax.Array], tuple[list, int]]
+
+
+@dataclasses.dataclass
+class KMedoidsResult:
+    medoids: list[int]            # k point indices (cluster slot order)
+    labels: np.ndarray            # (n,) cluster slot per point
+    cost: float                   # sum of distances to assigned medoids
+    pulls: int                    # total scheduled distance evaluations
+    build_pulls: int
+    assign_pulls: int
+    refine_pulls: int
+    swap_pulls: int
+    swaps: int                    # accepted SWAP moves
+    refine_updates: int           # per-cluster medoid changes during sweeps
+    k: int = 0
+    metric: str = "l2"
+    backend: str = "reference"
+
+
+# --------------------------------------------------------------------------
+# jitted phase kernels — one compilation per (n, d, k, budget, metric,
+# backend) signature, reused across BUILD steps / SWAP rounds / sweeps.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
+def _build_step(data: jnp.ndarray, d1: jnp.ndarray, chosen: jnp.ndarray,
+                key: jax.Array, *, budget: int, metric: str,
+                backend: str) -> jnp.ndarray:
+    """One BUILD greedy step as a correlated-SH argmin: the same static
+    round schedule and shared reference draws as ``_run_rounds``, with the
+    BanditPAM BUILD estimator ``sum_j min(d1_j, d(i, j))`` (the cached
+    nearest-medoid distance caps every reference's contribution). Arms
+    already chosen as medoids are masked to +inf."""
+    n = data.shape[0]
+    rounds = round_schedule(n, budget)
+    pw = get_backend(backend).pairwise(metric)
+    select_fn = _resolve_select_fn(backend)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    arm_ok = ~chosen
+    theta = None
+    for rd in rounds:
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        blk = pw(data[idx], data[refs])                       # (s_r, t_r)
+        sums = jnp.sum(jnp.minimum(blk, d1[refs][None, :]), axis=1)
+        theta = jnp.where(arm_ok[idx], sums / refs.shape[0], jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            return idx[jnp.argmin(theta)]
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta, keep)]
+    return idx[jnp.argmin(theta)]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def _assign(data: jnp.ndarray, med_idx: jnp.ndarray, *, metric: str,
+            backend: str):
+    """Full (n, k) medoid-distance cache + nearest/second-nearest summary."""
+    pw = get_backend(backend).pairwise(metric)
+    dmat = pw(data, data[med_idx])                            # (n, k)
+    return (dmat,) + _top2_of(dmat)
+
+
+def _top2_of(dmat: jnp.ndarray):
+    """(d1, d2, nearest) from the (n, k) cache — d2 = +inf when k == 1."""
+    if dmat.shape[1] == 1:
+        d1 = dmat[:, 0]
+        return d1, jnp.full_like(d1, jnp.inf), jnp.zeros(d1.shape, jnp.int32)
+    vals, ids = jax.lax.top_k(-dmat, 2)
+    return -vals[:, 0], -vals[:, 1], ids[:, 0].astype(jnp.int32)
+
+
+_top2 = jax.jit(_top2_of)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "k", "metric", "backend"))
+def _swap_argmin(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                 nearest: jnp.ndarray, chosen: jnp.ndarray, key: jax.Array,
+                 *, budget: int, k: int, metric: str, backend: str):
+    """One correlated-SH pass over swap-in candidates. Returns
+    ``(candidate, medoid slot, estimated per-reference delta)`` for the best
+    (candidate, slot) pair under the FasterPAM decomposition — every round's
+    shared reference draw prices all k swaps of every surviving candidate."""
+    n = data.shape[0]
+    rounds = round_schedule(n, budget)
+    pw = get_backend(backend).pairwise(metric)
+    select_fn = _resolve_select_fn(backend)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    arm_ok = ~chosen
+    theta = delta = None
+    for rd in rounds:
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        blk = pw(data[idx], data[refs])                       # (C, t)
+        d1r, d2r = d1[refs][None, :], d2[refs][None, :]
+        gain = jnp.minimum(blk - d1r, 0.0)                    # (C, t)
+        term = jnp.minimum(blk, d2r) - d1r - gain             # (C, t)
+        onehot = jax.nn.one_hot(nearest[refs], k, dtype=blk.dtype)  # (t, k)
+        delta = jnp.sum(gain, axis=1, keepdims=True) + term @ onehot  # (C, k)
+        best = jnp.min(delta, axis=1)
+        theta = jnp.where(arm_ok[idx], best / refs.shape[0], jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            break
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta, keep)]
+    c_pos = jnp.argmin(theta)
+    slot = jnp.argmin(delta[c_pos]).astype(jnp.int32)
+    return idx[c_pos], slot, theta[c_pos]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def _exact_swap_delta(data: jnp.ndarray, cand: jnp.ndarray,
+                      slot: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                      nearest: jnp.ndarray, *, metric: str, backend: str):
+    """Exact cost delta of swapping medoid ``slot`` for point ``cand`` — one
+    n-vector of distances (the verification step before any swap is
+    applied). Returns ``(delta, d(cand, .))``; the distance row is reused to
+    update the cache column when the swap is accepted."""
+    pw = get_backend(backend).pairwise(metric)
+    dc = pw(data[cand][None, :], data)[0]                     # (n,)
+    mine = nearest == slot
+    delta = jnp.sum(jnp.where(mine, jnp.minimum(dc, d2) - d1,
+                              jnp.minimum(dc - d1, 0.0)))
+    return delta, dc
+
+
+# --------------------------------------------------------------------------
+# ragged per-cluster refinement
+# --------------------------------------------------------------------------
+
+def make_direct_refiner(*, metric: str, backend: str, budget_per_arm: int,
+                        min_bucket: int = DEFAULT_MIN_BUCKET) -> Refiner:
+    """The in-process refiner: coalesce the cluster subproblems into
+    power-of-two buckets and answer each bucket with ONE
+    ``corr_sh_medoid_ragged`` dispatch — heterogeneous cluster sizes share
+    the per-bucket compiled programs with every other ragged traffic
+    source. Per-bucket key: ``fold_in(key, n_bucket)``. Batch slots are
+    padded to the next power of two (dummy length-1 queries), so the number
+    of compiled programs stays bounded no matter how cluster counts shift
+    between sweeps — the same fixed-slot trick the MedoidServer uses."""
+    def refine(arrays: list, key: jax.Array) -> tuple[list, int]:
+        plan = plan_buckets([a.shape[0] for a in arrays], min_bucket)
+        locals_: list = [None] * len(arrays)
+        pulls = 0
+        for nb, idxs in plan.items():
+            group = [arrays[i] for i in idxs]
+            slots = next_pow2(len(group))
+            packed, lens = pack_queries(group, min_bucket,
+                                        pad_batch_to=slots)
+            meds = corr_sh_medoid_ragged(
+                packed, lens, jax.random.fold_in(key, nb),
+                budget=budget_per_arm * nb, metric=metric, backend=backend,
+                min_bucket=min_bucket)
+            # honest accounting: padded slots run the schedule too
+            pulls += schedule_pulls(nb, budget_per_arm * nb) * slots
+            for s, i in enumerate(idxs):
+                locals_[i] = int(meds[s])
+        return locals_, pulls
+    return refine
+
+
+# --------------------------------------------------------------------------
+# the full pipeline
+# --------------------------------------------------------------------------
+
+def bandit_kmedoids(data, k: int, key: jax.Array, *, metric: str = "l2",
+                    backend: str = "reference",
+                    build_budget_per_arm: int = 16,
+                    swap_budget_per_arm: int = 16,
+                    refine_budget_per_arm: int = 20,
+                    refine_sweeps: int = 1, max_swap_rounds: int = 8,
+                    min_bucket: int = DEFAULT_MIN_BUCKET,
+                    refiner: Optional[Refiner] = None) -> KMedoidsResult:
+    """BUILD -> ragged per-cluster refinement -> bandit SWAP.
+
+    ``data (n, d)``; returns a :class:`KMedoidsResult` whose ``medoids`` are
+    point indices (slot order fixed by BUILD) and whose pull counters are
+    exact scheduled distance-evaluation counts. Keys derive per phase
+    (``fold_in(key, 0/1/2)`` for BUILD / refine / SWAP) so any phase is
+    reproducible in isolation. ``refiner`` overrides how the per-cluster
+    subproblems are answered (default: in-process bucketed ragged
+    dispatches; see :class:`repro.cluster.service.ServiceRefiner` for the
+    continuous-batching route).
+    """
+    data = jnp.asarray(data)
+    if data.ndim != 2:
+        raise ValueError(f"expected (n, d) data, got shape {data.shape}")
+    n = int(data.shape[0])
+    if not 1 <= k <= n:
+        raise ValueError(f"need 1 <= k <= n, got k={k}, n={n}")
+    get_backend(backend)                  # fail before any work
+    if refiner is None:
+        refiner = make_direct_refiner(metric=metric, backend=backend,
+                                      budget_per_arm=refine_budget_per_arm,
+                                      min_bucket=min_bucket)
+
+    build_budget = build_budget_per_arm * n
+    swap_budget = swap_budget_per_arm * n
+    pw = get_backend(backend).pairwise(metric)
+
+    # ---------------- BUILD: k correlated-SH argmin steps ----------------
+    key_build = jax.random.fold_in(key, 0)
+    meds: list[int] = []
+    chosen = jnp.zeros((n,), bool)
+    d1 = jnp.full((n,), jnp.inf, jnp.float32)
+    build_pulls = 0
+    for t in range(k):
+        kt = jax.random.fold_in(key_build, t)
+        if t == 0:
+            # the first step IS the paper's problem — same jitted entry point
+            m = int(corr_sh_medoid(data, kt, budget=build_budget,
+                                   metric=metric, backend=backend))
+        else:
+            m = int(_build_step(data, d1, chosen, kt, budget=build_budget,
+                                metric=metric, backend=backend))
+        build_pulls += schedule_pulls(n, build_budget)
+        meds.append(m)
+        d1 = jnp.minimum(d1, pw(data[m][None, :], data)[0])   # cache update
+        build_pulls += n
+        chosen = chosen.at[m].set(True)
+
+    dmat, d1, d2, nearest = _assign(data, jnp.asarray(meds, jnp.int32),
+                                    metric=metric, backend=backend)
+    assign_pulls = n * k
+
+    # ------- ragged per-cluster refinement with affected-set caching -------
+    key_refine = jax.random.fold_in(key, 1)
+    refine_pulls = refine_updates = 0
+    changed = set(range(k))
+    for sweep in range(refine_sweeps):
+        if not changed:
+            break
+        labels_np = np.asarray(nearest)
+        which = [(c, np.flatnonzero(labels_np == c)) for c in sorted(changed)]
+        which = [(c, mem) for c, mem in which if mem.size > 0]
+        if not which:
+            break
+        locals_, p = refiner([data[mem] for _, mem in which],
+                             jax.random.fold_in(key_refine, sweep))
+        refine_pulls += p
+        updates = 0
+        for (c, mem), loc in zip(which, locals_):
+            g = int(mem[int(loc)])
+            if g != meds[c]:
+                meds[c] = g
+                updates += 1
+        refine_updates += updates
+        if updates == 0:
+            break
+        dmat, d1, d2, nearest = _assign(data, jnp.asarray(meds, jnp.int32),
+                                        metric=metric, backend=backend)
+        assign_pulls += n * k
+        moved = np.asarray(nearest) != labels_np
+        changed = (set(np.asarray(nearest)[moved].tolist())
+                   | set(labels_np[moved].tolist())) if moved.any() else set()
+
+    # ---------------- SWAP: bandit FasterPAM local search ----------------
+    key_swap = jax.random.fold_in(key, 2)
+    swap_pulls = swaps = rejections = 0
+    # k == n leaves no swap-in candidates (every point is a medoid) — and
+    # covers n == 1, whose empty round schedule the argmin couldn't handle
+    swap_rounds = max_swap_rounds if k < n else 0
+    for rnd in range(swap_rounds):
+        chosen = jnp.zeros((n,), bool).at[jnp.asarray(meds)].set(True)
+        cand, slot, _ = _swap_argmin(data, d1, d2, nearest, chosen,
+                                     jax.random.fold_in(key_swap, rnd),
+                                     budget=swap_budget, k=k, metric=metric,
+                                     backend=backend)
+        swap_pulls += schedule_pulls(n, swap_budget)
+        delta, dc = _exact_swap_delta(data, cand, slot, d1, d2, nearest,
+                                      metric=metric, backend=backend)
+        swap_pulls += n
+        tol = -1e-6 * max(1.0, float(jnp.sum(d1)) / n)
+        if float(delta) >= tol:
+            # the winning arm didn't verify — that's estimator noise, not
+            # convergence. Re-draw references (next round key) and only stop
+            # after consecutive failures.
+            rejections += 1
+            if rejections >= 2:
+                break
+            continue
+        rejections = 0
+        meds[int(slot)] = int(cand)
+        dmat = dmat.at[:, int(slot)].set(dc)   # incremental: one column
+        d1, d2, nearest = _top2(dmat)
+        swaps += 1
+
+    pulls = build_pulls + assign_pulls + refine_pulls + swap_pulls
+    return KMedoidsResult(
+        medoids=meds, labels=np.asarray(nearest), cost=float(jnp.sum(d1)),
+        pulls=pulls, build_pulls=build_pulls, assign_pulls=assign_pulls,
+        refine_pulls=refine_pulls, swap_pulls=swap_pulls, swaps=swaps,
+        refine_updates=refine_updates, k=k, metric=metric, backend=backend)

@@ -1,0 +1,57 @@
+"""Clustering against the continuous-batching medoid service.
+
+The refinement phase of :func:`repro.cluster.kmedoids.bandit_kmedoids` is a
+stream of independent single-medoid queries with heterogeneous sizes — which
+is exactly the workload :class:`repro.launch.serve_medoid.MedoidServer`
+exists for. :class:`ServiceRefiner` adapts the refiner hook to submit each
+cluster subproblem as a service request, so a clustering job shares the
+server's bucketed dispatch, fixed-slot batching, and compile-odometer
+guarantees with every other tenant's medoid traffic (and its per-request
+accounting: the pulls reported are the server's scheduled pulls).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.cluster.kmedoids import KMedoidsResult, bandit_kmedoids
+
+
+class ServiceRefiner:
+    """Refiner hook that routes per-cluster medoid queries through a
+    ``MedoidServer``. The server owns its key stream and budget policy
+    (``budget_per_arm * n_bucket`` per request — the same shape as the
+    direct refiner), so the ``key`` argument of the hook is unused."""
+
+    def __init__(self, server):
+        self.server = server
+
+    def __call__(self, arrays: list, key: jax.Array) -> tuple[list, int]:
+        rids = [self.server.submit(a) for a in arrays]
+        self.server.drain()
+        answered = [self.server.done[r] for r in rids]
+        return ([int(r.medoid) for r in answered],
+                sum(r.pulls for r in answered))
+
+
+def kmedoids_via_service(data, k: int, key: jax.Array, *,
+                         server: Optional[object] = None,
+                         metric: str = "l2", backend: str = "reference",
+                         refine_budget_per_arm: int = 20, max_batch: int = 8,
+                         **kwargs) -> tuple[KMedoidsResult, object]:
+    """Run bandit k-medoids with refinement served by a continuous-batching
+    ``MedoidServer`` (a fresh one unless ``server`` is passed — pass a live
+    server to co-schedule clustering with other medoid traffic). Returns
+    ``(result, server)`` so callers can read the server's dispatch stats."""
+    from repro.launch.serve_medoid import MedoidServer
+
+    srv = server
+    if srv is None:
+        srv = MedoidServer(metric=metric, backend=backend,
+                           budget_per_arm=refine_budget_per_arm,
+                           max_batch=max_batch)
+    result = bandit_kmedoids(data, k, key, metric=metric, backend=backend,
+                             refine_budget_per_arm=refine_budget_per_arm,
+                             refiner=ServiceRefiner(srv), **kwargs)
+    return result, srv

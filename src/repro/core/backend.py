@@ -34,13 +34,20 @@ backends:
     no round ever materializes the (s_r, t_r) block in HBM, for any metric.
     This is the memory-roofline-optimal production path.
 
+``pallas_fused_topk``
+    ``pallas_fused`` plus the fused top-k survivor-selection epilogue
+    (:func:`repro.kernels.ops.kernel_topk_smallest`): the halving step's
+    top-k runs as an on-chip rank/select kernel pair instead of XLA's
+    generic sort, with bit-identical stable-tie semantics — no step of a
+    round leaves the chip.
+
 On non-TPU hosts the Pallas backends transparently run in interpret mode
 (see :mod:`repro.kernels.ops`), so every backend is selectable everywhere.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Union
+from typing import Callable, Optional, Union
 
 import jax.numpy as jnp
 
@@ -65,6 +72,12 @@ class DistanceBackend:
     centrality_sums: Callable[[str], CentralityFn]
     materializes_block: bool   # does centrality ever put (C, R) in HBM?
     description: str = ""
+    # Optional fused survivor-selection epilogue: ``fn(theta, keep)`` returns
+    # the indices of the ``keep`` smallest estimates with jax.lax.top_k's
+    # exact stable-tie semantics. When set, the round loops route the halving
+    # step through it instead of the default XLA top_k — the last off-chip
+    # step of a round stays on-chip. ``None`` = default selection.
+    survivor_topk: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
 
 
 _REGISTRY: dict[str, DistanceBackend] = {}
@@ -136,4 +149,18 @@ register_backend(DistanceBackend(
     centrality_sums=kops.centrality_kernel,
     materializes_block=False,
     description="fused in-kernel reference reduction (no (C, R) in HBM)",
+))
+
+
+def _topk_epilogue(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
+    return kops.kernel_topk_smallest(theta, keep=keep)
+
+
+register_backend(DistanceBackend(
+    name="pallas_fused_topk",
+    pairwise=kops.pairwise_kernel,
+    centrality_sums=kops.centrality_kernel,
+    materializes_block=False,
+    description="pallas_fused + on-chip top-k survivor-selection epilogue",
+    survivor_topk=_topk_epilogue,
 ))

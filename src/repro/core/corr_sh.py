@@ -99,8 +99,25 @@ def _resolve_theta_fn(metric: str, pairwise_fn: Optional[PairwiseFn],
     return get_backend(backend).centrality_sums(metric)
 
 
+def _default_select(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Survivor selection: indices of the ``keep`` smallest estimates,
+    ascending, ties stable toward the smaller index (top_k on negated
+    values, static k)."""
+    return jax.lax.top_k(-theta, keep)[1]
+
+
+def _resolve_select_fn(backend: BackendLike) -> Callable:
+    """The halving step's top-k: a backend with a fused survivor-selection
+    epilogue (``survivor_topk``, e.g. ``pallas_fused_topk``) keeps it
+    on-chip; everyone else gets the default XLA top_k. Both have identical
+    stable-tie semantics, so the choice never changes survivors."""
+    fn = get_backend(backend).survivor_topk
+    return fn if fn is not None else _default_select
+
+
 def _run_rounds(data: jnp.ndarray, key: jax.Array, rounds: list[Round],
-                n: int, theta_fn: Callable):
+                n: int, theta_fn: Callable,
+                select_fn: Callable = _default_select):
     """The round loop as a pure array program: static shapes only, no Python
     state in the return value — safe under ``jax.vmap`` (the batched engine
     maps this exact function over a leading batch axis).
@@ -120,9 +137,7 @@ def _run_rounds(data: jnp.ndarray, key: jax.Array, rounds: list[Round],
             # exact estimates (t_r == n) or nothing left to halve: output argmin
             return idx[jnp.argmin(theta_hat)], theta_hat, r
         keep = math.ceil(idx.shape[0] / 2)
-        # smallest-theta half survives; top_k on negated values, static k
-        _, order = jax.lax.top_k(-theta_hat, keep)
-        idx = idx[order]
+        idx = idx[select_fn(theta_hat, keep)]   # smallest-theta half survives
     return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
 
 
@@ -146,7 +161,9 @@ def correlated_sequential_halving(
     if not rounds:  # n == 1
         return CorrSHResult(medoid=jnp.zeros((), jnp.int32), pulls=0)
     theta_fn = _resolve_theta_fn(metric, pairwise_fn, backend)
-    medoid, theta_hat, r_stop = _run_rounds(data, key, rounds, n, theta_fn)
+    select_fn = _resolve_select_fn(backend)
+    medoid, theta_hat, r_stop = _run_rounds(data, key, rounds, n, theta_fn,
+                                            select_fn)
     return CorrSHResult(
         medoid=medoid,
         pulls=sum(x.pulls for x in rounds[: r_stop + 1]),
@@ -185,9 +202,10 @@ def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
     if not rounds:  # n == 1
         return jnp.zeros((b,), jnp.int32)
     theta_fn = _resolve_theta_fn(metric, None, backend)
+    select_fn = _resolve_select_fn(backend)
 
     def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        return _run_rounds(x, k, rounds, n, theta_fn)[0]
+        return _run_rounds(x, k, rounds, n, theta_fn, select_fn)[0]
 
     return jax.vmap(one)(data, keys)
 
@@ -232,7 +250,8 @@ def _resolve_masked_theta_fn(metric: str, backend: BackendLike) -> Callable:
 
 
 def _run_rounds_masked(data: jnp.ndarray, valid: jnp.ndarray, key: jax.Array,
-                       rounds: list[Round], n: int, theta_fn: Callable):
+                       rounds: list[Round], n: int, theta_fn: Callable,
+                       select_fn: Callable = _default_select):
     """The round loop of ``_run_rounds`` generalized to a validity mask.
 
     ``valid: (n,) bool`` marks real points; padded arms get +inf estimates
@@ -254,8 +273,7 @@ def _run_rounds_masked(data: jnp.ndarray, valid: jnp.ndarray, key: jax.Array,
         if rd.exact or idx.shape[0] <= 2:
             return idx[jnp.argmin(theta_hat)], theta_hat, r
         keep = math.ceil(idx.shape[0] / 2)
-        _, order = jax.lax.top_k(-theta_hat, keep)
-        idx = idx[order]
+        idx = idx[select_fn(theta_hat, keep)]
     return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
 
 
@@ -285,9 +303,11 @@ def _ragged_impl(data: jnp.ndarray, lengths: jnp.ndarray, key: jax.Array, *,
     valid = jnp.arange(n_bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
     keys = jax.random.split(key, b)
     theta_fn = _resolve_masked_theta_fn(metric, backend)
+    select_fn = _resolve_select_fn(backend)
 
     def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        return _run_rounds_masked(x, v, k, rounds, n_bucket, theta_fn)[0]
+        return _run_rounds_masked(x, v, k, rounds, n_bucket, theta_fn,
+                                  select_fn)[0]
 
     return jax.vmap(one)(data, valid, keys)
 

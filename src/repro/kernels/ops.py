@@ -149,6 +149,33 @@ def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
                              ref_mask=mask, interpret=interp)[:c, 0]
 
 
+@functools.partial(jax.jit, static_argnames=("keep", "interpret"))
+def kernel_topk_smallest(theta: jnp.ndarray, *, keep: int,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Fused survivor-selection epilogue: indices of the ``keep`` smallest
+    entries of ``theta (C,)``, ordered ascending with ties broken toward the
+    smaller index — drop-in for ``jax.lax.top_k(-theta, keep)[1]`` (the round
+    loop's halving step), computed by the on-chip rank/select kernel pair so
+    survivor selection never leaves the chip."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c = theta.shape[0]
+    if not 0 < keep <= c:
+        raise ValueError(f"keep must be in [1, {c}], got {keep}")
+    cp = c + (-c) % pk.BC
+    # IEEE-totalorder monotone int key (sign-flip bitcast): plain int
+    # comparison then orders floats exactly like XLA's sort, including
+    # -0.0 < +0.0 — plain float </== would merge the two zeros and diverge
+    # from top_k on which one survives first.
+    b = jax.lax.bitcast_convert_type(theta.astype(jnp.float32), jnp.int32)
+    key = jnp.where(b >= 0, b, (~b) ^ jnp.int32(-(2 ** 31)))
+    # int32-max-pad: padded rows rank strictly after every real arm (even
+    # +inf estimates), so no real slot below ``c`` can point at padding.
+    # kp <= cp always (keep <= c).
+    v = jnp.pad(key, (0, cp - c), constant_values=jnp.iinfo(jnp.int32).max)
+    kp = min(cp, keep + (-keep) % 128)
+    return pk.topk_smallest(v, kp, interpret=interp)[0, :keep]
+
+
 _KERNELS = {
     "l1": kernel_l1,
     "l2": kernel_l2,

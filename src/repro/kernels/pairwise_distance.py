@@ -268,3 +268,93 @@ def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((BC, BR), jnp.float32)],
         interpret=interpret,
     )(x, y, xn2, yn2, mask.reshape(1, r))
+
+
+# --------------------------------------------------------------------------
+# fused top-k survivor-selection epilogue: given the per-candidate centrality
+# estimates a round's fused kernel just produced, pick the ``keep`` smallest
+# arms ON-CHIP — the last remaining off-chip step of a round (XLA's generic
+# sort over the (C,) estimates). Semantics replicate jax.lax.top_k(-theta, k)
+# exactly, stable index tie-break included, so the survivor *order* (which
+# seeds the next round's gather) is bit-identical to the default path.
+#
+# Two accumulation kernels in the house style (no sort network needed):
+#
+# * rank kernel, grid (i, j): rank[i] = #{j : theta[j] < theta[i]  or
+#   (theta[j] == theta[i] and j < i)}. The strict total order makes `rank` a
+#   permutation of [0, C), and the (BC, BC) comparison tile only ever lives
+#   in VMEM/registers — the (C, C) comparison matrix is never materialized.
+# * select kernel, grid (i,): out[s] = sum_i i * [rank[i] == s] — a one-hot
+#   scatter of each index to its rank slot, accumulated over candidate tiles.
+#
+# Padded candidate rows carry +inf and indices above every real arm, so they
+# rank strictly after all real arms (+inf ties break by index) and land in
+# slots >= C that the wrapper slices off. Masked (+inf) *real* arms — the
+# ragged engine's padded-arm estimates — get the same index-stable order
+# top_k gives them.
+# --------------------------------------------------------------------------
+
+def _topk_rank_kernel(vc_ref, vr_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vi = vc_ref[...]                      # (BC, 1) this tile's arm estimates
+    vj = vr_ref[...]                      # (1, BC) estimates being ranked against
+    gi = i * BC + jax.lax.broadcasted_iota(jnp.int32, (BC, 1), 0)
+    gj = j * BC + jax.lax.broadcasted_iota(jnp.int32, (1, BC), 1)
+    beats = (vj < vi) | ((vj == vi) & (gj < gi))      # (BC, BC) broadcast
+    o_ref[...] += jnp.sum(beats.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def _topk_select_kernel(r_ref, o_ref, *, kp: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    rank = r_ref[...]                     # (BC, 1) int32, a permutation slice
+    gi = i * BC + jax.lax.broadcasted_iota(jnp.int32, (BC, 1), 0)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+    hit = rank == slot                    # (BC, kp) one-hot over output slots
+    o_ref[...] += jnp.sum(jnp.where(hit, gi, 0), axis=0, keepdims=True)
+
+
+def topk_smallest(v: jnp.ndarray, kp: int, *,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Indices of the ascending-sorted prefix of ``v``, on-chip.
+
+    v: (Cp,) int32 *total-order keys* (see ``ops.kernel_topk_smallest`` —
+    the float estimates are bitcast to the IEEE-totalorder monotone int so
+    comparisons match XLA's sort exactly, -0.0 < +0.0 included), Cp a
+    multiple of BC, padded with int32 max; kp: output slot count (multiple
+    of 128, >= the ``keep`` the caller will slice, <= Cp). Returns (1, kp)
+    int32 where slot s holds the index of the (s+1)-th smallest value,
+    ties broken toward the smaller index — exactly
+    ``jax.lax.top_k(-theta, kp)[1]`` restricted to the real arms.
+    """
+    cp = v.shape[0]
+    grid_rank = (cp // BC, cp // BC)
+    ranks = pl.pallas_call(
+        _topk_rank_kernel,
+        grid=grid_rank,
+        in_specs=[
+            pl.BlockSpec((BC, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, BC), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BC, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cp, 1), jnp.int32),
+        interpret=interpret,
+    )(v.reshape(cp, 1), v.reshape(1, cp))
+    return pl.pallas_call(
+        functools.partial(_topk_select_kernel, kp=kp),
+        grid=(cp // BC,),
+        in_specs=[pl.BlockSpec((BC, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, kp), jnp.int32),
+        interpret=interpret,
+    )(ranks)

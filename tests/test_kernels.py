@@ -77,3 +77,46 @@ def test_distance_properties(c, d):
         np.testing.assert_allclose(m, m.T, rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.diag(m), 0.0, atol=1e-2)
         assert (m >= -1e-3).all()
+
+
+# ------------------ fused top-k survivor-selection epilogue -----------------
+
+@pytest.mark.parametrize("c,keep", [(1, 1), (5, 2), (8, 8), (128, 64),
+                                    (130, 65), (257, 100), (300, 3),
+                                    (513, 257)])
+def test_topk_smallest_matches_lax_top_k(c, keep):
+    """The on-chip rank/select pair must replicate jax.lax.top_k(-theta, k)
+    bit-exactly — ascending values, stable index tie-break — because the
+    round loop's survivor ORDER seeds the next round's gathers."""
+    theta = jax.random.normal(jax.random.key(c * 7 + keep), (c,))
+    got = ops.kernel_topk_smallest(theta, keep=keep)
+    want = jax.lax.top_k(-theta, keep)[1]
+    assert got.tolist() == want.tolist()
+
+
+def test_topk_smallest_ties_and_inf():
+    """Duplicate values and +inf entries (the ragged engine's masked arms)
+    keep top_k's stable ordering."""
+    theta = jnp.array([3.0, 1.0, jnp.inf, 1.0, 2.0, jnp.inf, 1.0, 0.5])
+    got = ops.kernel_topk_smallest(theta, keep=6)
+    want = jax.lax.top_k(-theta, 6)[1]
+    assert got.tolist() == want.tolist() == [7, 1, 3, 6, 4, 0]
+
+
+def test_topk_smallest_validates_keep():
+    with pytest.raises(ValueError, match="keep"):
+        ops.kernel_topk_smallest(jnp.zeros((4,)), keep=5)
+    with pytest.raises(ValueError, match="keep"):
+        ops.kernel_topk_smallest(jnp.zeros((4,)), keep=0)
+
+
+@given(c=st.integers(1, 300), frac=st.integers(1, 100))
+@settings(max_examples=25, deadline=None)
+def test_topk_smallest_hypothesis(c, frac):
+    keep = max(1, min(c, (c * frac) // 100))
+    key = jax.random.key(c * 101 + frac)
+    # quantized values force plenty of exact ties
+    theta = jnp.round(jax.random.normal(key, (c,)) * 4.0) / 4.0
+    got = ops.kernel_topk_smallest(theta, keep=keep)
+    want = jax.lax.top_k(-theta, keep)[1]
+    assert got.tolist() == want.tolist()

@@ -1,0 +1,266 @@
+"""Bandit k-medoids subsystem: recovery, PAM parity, ragged reuse, backends.
+
+The contract under test:
+
+* **recovery** — planted clusters are recovered (ARI >= 0.95) with >= 10x
+  fewer distance evaluations than exact PAM's ``n^2`` (the acceptance cell
+  runs the real CLI entry point at n=4096);
+* **parity** — in the exact-reference regime (t_r == n) the bandit BUILD
+  equals exact greedy BUILD step for step, and the bandit SWAP converges to
+  exact PAM's medoid set; a k=1 BUILD and a full-bucket single-cluster
+  refinement step are *bit-identical* to ``corr_sh_medoid``;
+* **ragged reuse** — per-cluster subproblems ride the bucketed ragged
+  engine: the compile odometer stays within the bucket bound and a second
+  sweep with the same shape traffic compiles NOTHING new;
+* **backends** — every registered backend returns identical medoids and
+  labels for a fixed key.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (adjusted_rand_index, bandit_kmedoids,
+                           kmedoids_via_service, make_direct_refiner,
+                           pam_build, pam_exact, pam_pulls)
+from repro.cluster.pam_exact import distance_matrix
+from repro.core import (bucket_n, corr_sh_medoid, list_backends,
+                        num_buckets_for_range, ragged_compile_count)
+from repro.data.medoid_datasets import (CLUSTER_DATASETS, planted_clusters,
+                                        rnaseq_clusters, uneven_sizes)
+
+pytestmark = pytest.mark.cluster
+
+BACKENDS = list_backends()
+
+
+def _exact_budget(n: int) -> int:
+    """Per-arm budget putting every round in the exact regime (t_r == n)."""
+    return n * max(1, math.ceil(math.log2(n)))
+
+
+# ------------------------------- metrics -----------------------------------
+
+def test_ari_semantics():
+    a = [0, 0, 1, 1, 2, 2]
+    assert adjusted_rand_index(a, a) == 1.0
+    assert adjusted_rand_index(a, [2, 2, 0, 0, 1, 1]) == 1.0   # relabeling
+    assert adjusted_rand_index(a, [0, 1, 0, 1, 0, 1]) < 0.5
+    with pytest.raises(ValueError, match="same points"):
+        adjusted_rand_index([0, 1], [0, 1, 2])
+
+
+def test_uneven_sizes_are_heterogeneous():
+    sizes = uneven_sizes(700, 4)
+    assert sum(sizes) == 700 and all(s >= 1 for s in sizes)
+    # spans multiple power-of-two buckets: the ragged traffic property
+    assert len({bucket_n(s) for s in sizes}) >= 2
+
+
+def test_uneven_sizes_every_cluster_nonempty():
+    """The clamp-and-rebalance never yields an empty cluster, even at
+    k ~ n (regression: the overshoot used to be dumped on the last entry,
+    driving it to zero)."""
+    for n in (2, 17, 26, 64, 123):
+        for k in (1, 2, n // 2, n - 1, n):
+            if k < 1:
+                continue
+            sizes = uneven_sizes(n, k)
+            assert sum(sizes) == n and len(sizes) == k
+            assert all(s >= 1 for s in sizes), (n, k, sizes)
+
+
+# ------------------------------ recovery -----------------------------------
+
+def test_planted_recovery_and_invariants():
+    key = jax.random.key(0)
+    data, labels = planted_clusters(jax.random.fold_in(key, 1), 300,
+                                    d=16, k=4)
+    res = bandit_kmedoids(data, 4, jax.random.fold_in(key, 2))
+    assert adjusted_rand_index(res.labels, labels) >= 0.95
+    assert len(res.medoids) == 4 and len(set(res.medoids)) == 4
+    assert res.labels.shape == (300,)
+    assert set(np.unique(res.labels)) <= set(range(4))
+    # each medoid is assigned to its own slot, and total pulls add up
+    assert res.labels[res.medoids].tolist() == [0, 1, 2, 3]
+    assert res.pulls == (res.build_pulls + res.assign_pulls
+                         + res.refine_pulls + res.swap_pulls)
+    assert res.cost > 0.0
+
+
+@pytest.mark.parametrize("dataset", sorted(CLUSTER_DATASETS))
+def test_planted_recovery_all_dataset_flavors(dataset):
+    metric, gen = CLUSTER_DATASETS[dataset]
+    key = jax.random.key(3)
+    data, labels = gen(jax.random.fold_in(key, 1), 320, 128, 4)
+    res = bandit_kmedoids(data, 4, jax.random.fold_in(key, 2), metric=metric)
+    assert adjusted_rand_index(res.labels, labels) >= 0.95, dataset
+
+
+def test_acceptance_rnaseq_4096_recovery_and_pull_gap():
+    """The PR's acceptance cell, through the CLI's run(): k=8 on rnaseq-like
+    n=4096 recovers the planted clusters with >= 10x fewer distance
+    computations than exact PAM (whose pull count is n^2 by construction)."""
+    from repro.launch.kmedoids import run
+
+    out = run(4096, 128, 8, "rnaseq_like", seed=0)
+    assert out["ari"] >= 0.95
+    assert out["pam_pulls"] == pam_pulls(4096) == 4096 * 4096
+    assert out["pulls"] * 10 <= out["pam_pulls"]
+    assert out["pulls_ratio"] >= 10.0
+
+
+# ----------------------- parity vs exact PAM -------------------------------
+
+def test_build_parity_vs_exact_greedy():
+    """Exact-regime budgets (t_r == n): bandit BUILD's greedy choices equal
+    exact PAM BUILD's, step for step (order matters)."""
+    n, k = 64, 4
+    data, _ = planted_clusters(jax.random.key(5), n, d=8, k=k)
+    res = bandit_kmedoids(data, k, jax.random.key(6),
+                          build_budget_per_arm=_exact_budget(n),
+                          refine_sweeps=0, max_swap_rounds=0)
+    want, _ = pam_build(distance_matrix(data, "l2"), k)
+    assert res.medoids == want
+
+
+def test_swap_parity_vs_exact_pam():
+    """Exact-regime BUILD + SWAP converge to exact PAM's medoid set."""
+    n, k = 64, 3
+    data, _ = planted_clusters(jax.random.key(7), n, d=8, k=k)
+    res = bandit_kmedoids(data, k, jax.random.key(8),
+                          build_budget_per_arm=_exact_budget(n),
+                          swap_budget_per_arm=_exact_budget(n),
+                          refine_sweeps=0, max_swap_rounds=32)
+    pam = pam_exact(data, k, "l2")
+    assert sorted(res.medoids) == sorted(pam.medoids)
+    assert res.cost == pytest.approx(pam.cost, rel=1e-4)
+
+
+def test_k1_build_is_bit_identical_to_corr_sh_medoid():
+    """k=1 collapses to the paper's problem: BUILD literally calls the same
+    jitted ``corr_sh_medoid`` with the documented derived key."""
+    n = 128
+    data = jax.random.normal(jax.random.key(9), (n, 8))
+    key = jax.random.key(10)
+    res = bandit_kmedoids(data, 1, key, refine_sweeps=0, max_swap_rounds=0,
+                          build_budget_per_arm=16)
+    step0_key = jax.random.fold_in(jax.random.fold_in(key, 0), 0)
+    want = int(corr_sh_medoid(data, step0_key, budget=16 * n))
+    assert res.medoids == [want]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_bucket_single_cluster_refine_is_bit_identical(backend):
+    """A single cluster exactly filling its power-of-two bucket goes through
+    the ragged engine bit-identically to ``corr_sh_medoid`` — the full-bucket
+    theorem applied to clustering's refinement traffic."""
+    n, bpa = 256, 20
+    data = jax.random.normal(jax.random.key(11), (n, 12))
+    key = jax.random.key(12)
+    refiner = make_direct_refiner(metric="l2", backend=backend,
+                                  budget_per_arm=bpa)
+    locals_, pulls = refiner([data], key)
+    slot_key = jax.random.split(jax.random.fold_in(key, n), 1)[0]
+    want = int(corr_sh_medoid(data, slot_key, budget=bpa * n,
+                              backend=backend))
+    assert locals_ == [want]
+    assert pulls > 0
+
+
+# -------------------- ragged schedule reuse (odometer) ---------------------
+
+def test_refiner_compile_odometer_bound_and_reuse():
+    """Heterogeneous cluster sizes compile at most one program per bucket,
+    and a second sweep with the same shape traffic compiles NOTHING."""
+    key = jax.random.key(13)
+    sizes = (9, 33, 70, 200)       # buckets 16, 64, 128, 256
+    arrays = [jax.random.normal(jax.random.fold_in(key, i), (s, 6))
+              for i, s in enumerate(sizes)]
+    refiner = make_direct_refiner(metric="l2", backend="reference",
+                                  budget_per_arm=12)
+    c0 = ragged_compile_count()
+    refiner(arrays, jax.random.fold_in(key, 100))
+    first = ragged_compile_count() - c0
+    assert first <= num_buckets_for_range(min(sizes), max(sizes))
+    refiner(arrays, jax.random.fold_in(key, 101))      # fresh keys, same shapes
+    assert ragged_compile_count() - c0 == first        # zero new programs
+
+
+def test_pipeline_compile_odometer_second_run_free():
+    """End-to-end: replaying the pipeline compiles NOTHING new (the pow2
+    bucket + batch-slot padding keeps every shape out of the jit cache key),
+    and a different key can only add programs within the bucket-range bound
+    (cluster sizes may drift across bucket boundaries, buckets can't
+    multiply)."""
+    key = jax.random.key(14)
+    data, _ = planted_clusters(jax.random.fold_in(key, 1), 260, d=8, k=4)
+    bandit_kmedoids(data, 4, jax.random.fold_in(key, 2), refine_sweeps=2)
+    c0 = ragged_compile_count()
+    bandit_kmedoids(data, 4, jax.random.fold_in(key, 2), refine_sweeps=2)
+    assert ragged_compile_count() - c0 == 0
+    bandit_kmedoids(data, 4, jax.random.fold_in(key, 3), refine_sweeps=2)
+    assert ragged_compile_count() - c0 <= num_buckets_for_range(1, 260)
+
+
+# ------------------------------ backends -----------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_identical_medoids_and_labels(backend):
+    """Backends change memory traffic, never answers: a fixed key produces
+    the same medoid set and the same labeling under every backend."""
+    key = jax.random.key(15)
+    data, _ = planted_clusters(jax.random.fold_in(key, 1), 200, d=16, k=3)
+    res = bandit_kmedoids(data, 3, jax.random.fold_in(key, 2),
+                          backend=backend)
+    ref = bandit_kmedoids(data, 3, jax.random.fold_in(key, 2),
+                          backend="reference")
+    assert res.medoids == ref.medoids
+    assert res.labels.tolist() == ref.labels.tolist()
+
+
+# ------------------------------- service -----------------------------------
+
+def test_refinement_through_medoid_server():
+    """The service route answers the per-cluster subproblems through the
+    continuous-batching MedoidServer and still recovers the clusters."""
+    key = jax.random.key(16)
+    data, labels = planted_clusters(jax.random.fold_in(key, 1), 300,
+                                    d=16, k=4)
+    res, srv = kmedoids_via_service(data, 4, jax.random.fold_in(key, 2))
+    assert adjusted_rand_index(res.labels, labels) >= 0.95
+    stats = srv.stats()
+    assert stats["answered"] >= 4          # one query per refined cluster
+    assert stats["pending"] == 0
+    assert stats["recompiles"] <= stats["distinct_buckets"]
+    assert res.refine_pulls > 0
+
+
+# ------------------------------ validation ---------------------------------
+
+def test_degenerate_n1_and_k_equals_n():
+    """n=1 and k=n have no swap candidates — the pipeline must not crash
+    (regression: the SWAP argmin used to hit an empty round schedule)."""
+    res = bandit_kmedoids(jnp.zeros((1, 3)), 1, jax.random.key(0))
+    assert res.medoids == [0] and res.labels.tolist() == [0]
+    data = jax.random.normal(jax.random.key(1), (5, 3))
+    res = bandit_kmedoids(data, 5, jax.random.key(2))
+    assert sorted(res.medoids) == [0, 1, 2, 3, 4]
+    # Gram-trick self-distances are ~sqrt(eps), not exactly zero
+    assert res.cost == pytest.approx(0.0, abs=1e-2)
+
+
+def test_input_validation():
+    data = jnp.zeros((10, 3))
+    with pytest.raises(ValueError, match="1 <= k"):
+        bandit_kmedoids(data, 0, jax.random.key(0))
+    with pytest.raises(ValueError, match="1 <= k"):
+        bandit_kmedoids(data, 11, jax.random.key(0))
+    with pytest.raises(ValueError, match="expected"):
+        bandit_kmedoids(jnp.zeros((10,)), 2, jax.random.key(0))
+    with pytest.raises(ValueError, match="unknown backend"):
+        bandit_kmedoids(data, 2, jax.random.key(0), backend="nope")
+    with pytest.raises(ValueError, match="1 <= k"):
+        pam_exact(np.zeros((4, 2)), 5)
