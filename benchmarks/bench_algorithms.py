@@ -11,8 +11,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (corr_sh_medoid, exact_medoid, hardness_stats,
-                        meddit_medoid, rand_medoid, schedule_pulls)
+from repro.api import find_medoid
+from repro.core import (exact_medoid, hardness_stats, meddit_medoid,
+                        rand_medoid, schedule_pulls)
 from repro.data.medoid_datasets import DATASETS
 
 
@@ -34,8 +35,8 @@ def run(n: int = 2048, d: int = 512, trials: int = 20,
         errs = 0
         t0 = time.time()
         for s in range(trials):
-            m = int(corr_sh_medoid(data, jax.random.key(s), budget=budget,
-                                   metric=metric))
+            m = find_medoid(data, jax.random.key(s), metric=metric,
+                            budget_per_arm=budget_per_arm).medoid
             errs += m != truth
         t_corr = (time.time() - t0) / trials
         rows.append({"dataset": name, "metric": metric, "algo": "corrSH",

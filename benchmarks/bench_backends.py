@@ -4,7 +4,7 @@ Two tables per (metric, n, d) cell:
 
 * **centrality**: time one round-shaped centrality call (C candidates x R
   references -> (C,) estimates), the engine hot path, per backend; and
-* **end-to-end**: ``corr_sh_medoid`` wall time per backend, asserting all
+* **end-to-end**: ``repro.api.find_medoid`` wall time per backend, asserting all
   backends return the same medoid on the same key (parity is part of the
   benchmark contract, not just the test-suite's).
 
@@ -25,7 +25,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import corr_sh_medoid, get_backend, list_backends
+from repro.api import find_medoid
+from repro.core import get_backend, list_backends
 
 _CPU_INTERPRET_NOTE = "interpret-mode timing (correctness only off-TPU)"
 
@@ -63,8 +64,8 @@ def run(grid: tuple[tuple[int, int], ...] = ((1024, 128), (2048, 256)),
         # end-to-end parity + timing on one representative metric per cell
         medoids = {}
         for name in list_backends():
-            f = lambda x, k: corr_sh_medoid(x, k, budget=budget_per_arm * n,
-                                            metric="l2", backend=name)
+            f = lambda x, k: find_medoid(x, k, budget_per_arm=budget_per_arm,
+                                         metric="l2", backend=name).medoid
             us = _time(f, data, jax.random.key(7), reps=1)
             medoids[name] = int(f(data, jax.random.key(7)))
             rows.append({"name": f"corr_sh_l2_{name}_{n}x{d}",

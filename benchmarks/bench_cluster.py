@@ -21,8 +21,8 @@ import time
 
 import jax
 
-from repro.cluster import (adjusted_rand_index, bandit_kmedoids, pam_exact,
-                           pam_pulls)
+from repro.api import kmedoids
+from repro.cluster import adjusted_rand_index, pam_exact, pam_pulls
 from repro.data.medoid_datasets import rnaseq_clusters
 
 
@@ -34,8 +34,8 @@ def run(n_small: int = 512, n_big: int = 4096, d: int = 64, k: int = 8,
     # ---- head-to-head at exact-PAM-feasible scale ----
     data, labels = rnaseq_clusters(jax.random.fold_in(key, 1), n_small, d, k)
     t0 = time.time()
-    res = bandit_kmedoids(data, k, jax.random.fold_in(key, 2), metric="l1",
-                          backend=backend)
+    res = kmedoids(data, k, jax.random.fold_in(key, 2), metric="l1",
+                   backend=backend)
     t_bandit = time.time() - t0
     t0 = time.time()
     pam = pam_exact(data, k, "l1")
@@ -59,8 +59,8 @@ def run(n_small: int = 512, n_big: int = 4096, d: int = 64, k: int = 8,
     # ---- acceptance cell: CI-scale bandit run vs PAM's n^2 pulls ----
     data, labels = rnaseq_clusters(jax.random.fold_in(key, 3), n_big, d, k)
     t0 = time.time()
-    res = bandit_kmedoids(data, k, jax.random.fold_in(key, 4), metric="l1",
-                          backend=backend)
+    res = kmedoids(data, k, jax.random.fold_in(key, 4), metric="l1",
+                   backend=backend)
     t_bandit = time.time() - t0
     ari = adjusted_rand_index(res.labels, labels)
     ratio = pam_pulls(n_big) / res.pulls

@@ -1,0 +1,93 @@
+"""Unified-engine perf neutrality: the PR-4 facade re-runs the PR-3 cells.
+
+PR 4 replaced the four per-workload round-loop copies with the single
+estimator-parameterized ``repro.engine.run_halving`` behind ``repro.api``.
+This section makes the refactor's neutrality machine-checkable across PRs:
+
+* the **ragged cells** (mixed n in {64, 257, 1024}, the PR-2/3 serving
+  acceptance sweep) and the **cluster head-to-head cell** (n=512, k=8 vs
+  exact PAM) are re-run through the facade with the *same keys* as the
+  committed PR-3 numbers;
+* each cell is diffed against the committed ``BENCH_ragged.json`` /
+  ``BENCH_cluster.json``: **answers must match exactly** (medoids text,
+  pull counts — the engine is bit-exact, so any drift is a hard assertion
+  failure here, not a judgement call), while wall-clock is reported as an
+  informational ``ratio`` (CI machines vary; pulls don't).
+
+``python benchmarks/run.py --only engine`` writes ``BENCH_engine.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+
+import jax
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_ref(name: str, ref_dir: str) -> dict[str, dict]:
+    path = os.path.join(ref_dir, name)
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def run(d: int = 16, seed: int = 0, ref_dir: str | None = None) -> list[dict]:
+    from benchmarks import bench_ragged
+    from repro.api import KMedoidsConfig, kmedoids
+    from repro.data.medoid_datasets import rnaseq_clusters
+
+    ref_dir = ref_dir or _REPO
+    rows: list[dict] = []
+
+    # ---- ragged cells through the facade (same keys as the PR-3 sweep) ----
+    ref_ragged = _load_ref("BENCH_ragged.json", ref_dir)
+    for r in bench_ragged.run(ns=(64, 257, 1024), d=d, seed=seed):
+        row = {"name": f"engine_{r['name']}",
+               "us_per_call": r["us_per_call"], "derived": r["derived"]}
+        ref = ref_ragged.get(r["name"])
+        if ref and "medoids=" in str(ref.get("derived", "")):
+            match = ref["derived"] == r["derived"]
+            assert match, (
+                f"unified engine changed ragged answers on {r['name']}: "
+                f"{r['derived']} vs committed {ref['derived']}")
+            ratio = (r["us_per_call"] / ref["us_per_call"]
+                     if ref["us_per_call"] else float("nan"))
+            row["derived"] += f" answers_match_pr3=True ratio_vs_pr3={ratio:.2f}"
+        rows.append(row)
+
+    # ---- cluster head-to-head cell (bandit side; PAM side is n^2 always) ---
+    ref_cluster = _load_ref("BENCH_cluster.json", ref_dir)
+    n, k = 512, 8
+    key = jax.random.key(seed)
+    data, _ = rnaseq_clusters(jax.random.fold_in(key, 1), n, 64, k)
+    t0 = time.time()
+    res = kmedoids(data, k, jax.random.fold_in(key, 2),
+                   config=KMedoidsConfig(metric="l1"))
+    us = (time.time() - t0) * 1e6
+    derived = f"medoids={sorted(res.medoids)} swaps={res.swaps}"
+    ref = ref_cluster.get(f"kmedoids_bandit_reference_n{n}k{k}")
+    if ref and "pulls" in ref:
+        assert res.pulls == ref["pulls"], (
+            f"unified engine changed the cluster cell's pull count: "
+            f"{res.pulls} vs committed {ref['pulls']}")
+        m = re.search(r"swaps=(\d+)", str(ref.get("derived", "")))
+        if m:
+            assert res.swaps == int(m.group(1)), (
+                f"unified engine changed SWAP behavior: {res.swaps} accepted "
+                f"swaps vs committed {m.group(1)}")
+        ratio = us / ref["us_per_call"] if ref["us_per_call"] else float("nan")
+        derived += f" pulls_match_pr3=True ratio_vs_pr3={ratio:.2f}"
+    rows.append({"name": f"engine_kmedoids_bandit_n{n}k{k}",
+                 "us_per_call": round(us, 1), "pulls": res.pulls,
+                 "derived": derived})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")

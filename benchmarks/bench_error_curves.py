@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import corr_sh_medoid, exact_medoid, rand_medoid, schedule_pulls
+from repro.api import find_medoid
+from repro.core import exact_medoid, rand_medoid, schedule_pulls
 from repro.data.medoid_datasets import DATASETS
 
 
@@ -21,8 +22,8 @@ def run(n: int = 1024, d: int = 256, trials: int = 40,
         for per_arm in budgets:
             errs = 0
             for s in range(trials):
-                m = int(corr_sh_medoid(data, jax.random.key(1000 + s),
-                                       budget=per_arm * n, metric=metric))
+                m = find_medoid(data, jax.random.key(1000 + s),
+                                metric=metric, budget_per_arm=per_arm).medoid
                 errs += m != truth
             rows.append({"dataset": name, "algo": "corrSH",
                          "pulls_per_arm": schedule_pulls(n, per_arm * n) / n,

@@ -4,8 +4,8 @@ For a mixed stream of query sizes (the acceptance set is n in {64, 257,
 1024}), this measures per backend:
 
 * **ragged**: bucket the queries (:mod:`repro.core.bucketing`), dispatch one
-  ``corr_sh_medoid_ragged`` call per bucket;
-* **loop**: the same queries through per-query ``corr_sh_medoid`` calls
+  ``repro.api.find_medoids_ragged`` call per bucket;
+* **loop**: the same queries through per-query ``find_medoid`` calls
   (what a naive service would do — one compilation per *distinct n*, one
   dispatch per query).
 
@@ -27,9 +27,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (corr_sh_medoid, num_buckets_for_range, pack_queries,
+from repro.api import find_medoid, find_medoids_ragged
+from repro.core import (num_buckets_for_range, pack_queries,
                         plan_buckets)
-from repro.core.corr_sh import corr_sh_medoid_ragged, ragged_compile_count
+from repro.core.corr_sh import ragged_compile_count
 
 
 def _mixed_queries(ns, d: int, copies: int, seed: int = 0):
@@ -64,9 +65,10 @@ def run(ns: tuple[int, ...] = (64, 257, 1024), d: int = 16, copies: int = 2,
             data, lens = pack_queries(group, pad_batch_to=len(group))
             bpa = (nb * 10) if budget_per_arm is None else budget_per_arm
             t0 = time.time()
-            meds = corr_sh_medoid_ragged(data, lens, jax.random.fold_in(key, nb),
-                                         budget=bpa * nb, metric="l2",
-                                         backend=backend)
+            meds = find_medoids_ragged(data, lens,
+                                       jax.random.fold_in(key, nb),
+                                       budget_per_arm=bpa, metric="l2",
+                                       backend=backend)
             meds = [int(m) for m in meds]
             dt = time.time() - t0
             t_ragged += dt
@@ -85,9 +87,12 @@ def run(ns: tuple[int, ...] = (64, 257, 1024), d: int = 16, copies: int = 2,
         for i, q in enumerate(qs):
             nb = bucket_of[i]
             bpa = (nb * 10) if budget_per_arm is None else budget_per_arm
-            answers_loop[i] = int(corr_sh_medoid(
+            # same total budget as before the facade port: ceil(bpa*nb / n)
+            # per arm keeps the query in the exact regime its bucket implies
+            answers_loop[i] = find_medoid(
                 q, jax.random.fold_in(jax.random.fold_in(key, 7), i),
-                budget=bpa * nb, metric="l2", backend=backend))
+                budget_per_arm=-(-bpa * nb // q.shape[0]),
+                metric="l2", backend=backend).medoid
         t_loop = time.time() - t0
 
         assert answers_ragged == answers_loop, (

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core import corr_sh_medoid, exact_medoid, schedule_pulls
+from repro.api import find_medoid, kmedoids
+from repro.core import exact_medoid
 from repro.models import encdec as ED
 from repro.models import recurrent as R
 from repro.models import transformer as T
@@ -87,14 +88,14 @@ def main():
     n = embs.shape[0]
     print(f"embedded {n} sequences with {args.arch} (dim {embs.shape[1]})")
 
-    budget = 20 * n
     t0 = time.time()
-    rep = int(corr_sh_medoid(embs, jax.random.key(2), budget=budget,
-                             metric="l2"))
+    res = find_medoid(embs, jax.random.key(2), metric="l2",
+                      budget_per_arm=20)
+    rep = res.medoid
     t_corr = time.time() - t0
     truth = int(exact_medoid(embs, "l2"))
     print(f"representative sequence (corrSH): #{rep}  "
-          f"[{schedule_pulls(n, budget):,} pulls, {t_corr:.2f}s]")
+          f"[{res.pulls:,} pulls, {t_corr:.2f}s]")
     print(f"representative sequence (exact):  #{truth}  [{n * n:,} pulls]")
     print(f"match: {rep == truth}")
 
@@ -102,11 +103,9 @@ def main():
         # K representative sequences (coreset selection with coverage): bandit
         # k-medoids over the embeddings — BUILD/SWAP on the corrSH engine,
         # per-cluster refinement through the ragged bucketed dispatch
-        from repro.cluster import bandit_kmedoids
-
         t0 = time.time()
-        res = bandit_kmedoids(embs, args.cluster, jax.random.key(3),
-                              metric="l2", backend=args.backend)
+        res = kmedoids(embs, args.cluster, jax.random.key(3),
+                       metric="l2", backend=args.backend)
         sizes = [int((res.labels == c).sum()) for c in range(args.cluster)]
         print(f"\n{args.cluster}-medoid clustering in {time.time() - t0:.2f}s "
               f"({res.pulls:,} pulls vs {n * n:,} exact, "

@@ -6,8 +6,8 @@ import time
 
 import jax
 
-from repro.core import (corr_sh_medoid, corr_sh_medoid_batch, exact_medoid,
-                        hardness_stats, schedule_pulls)
+from repro.api import find_medoid, find_medoids_batch
+from repro.core import exact_medoid, hardness_stats
 from repro.data.medoid_datasets import rnaseq_like
 
 
@@ -17,11 +17,10 @@ def main():
     data = rnaseq_like(jax.random.key(0), n, d)
 
     t0 = time.time()
-    budget = 24 * n                       # ~24 distance evals per point
-    medoid = int(corr_sh_medoid(data, jax.random.key(1), budget=budget,
-                                metric="l1"))
+    res = find_medoid(data, jax.random.key(1), metric="l1",
+                      budget_per_arm=24)  # ~24 distance evals per point
+    medoid, pulls = res.medoid, res.pulls
     t_corr = time.time() - t0
-    pulls = schedule_pulls(n, budget)
     print(f"corrSH:  medoid={medoid}   pulls={pulls:,} "
           f"({pulls / n:.1f}/arm)  {t_corr:.2f}s")
 
@@ -42,8 +41,8 @@ def main():
 
     # Same algorithm on the fused Pallas backend: the per-round (s_r, t_r)
     # distance block is reduced inside the kernel and never reaches HBM.
-    m_fused = int(corr_sh_medoid(data, jax.random.key(1), budget=budget,
-                                 metric="l1", backend="pallas_fused"))
+    m_fused = find_medoid(data, jax.random.key(1), metric="l1",
+                          budget_per_arm=24, backend="pallas_fused").medoid
     print(f"pallas_fused backend: medoid={m_fused} "
           f"(agrees: {m_fused == medoid})")
 
@@ -51,8 +50,8 @@ def main():
     b, nb = 4, 256
     sets = jax.random.normal(jax.random.key(2), (b, nb, 32))
     t0 = time.time()
-    batch_medoids = corr_sh_medoid_batch(sets, jax.random.key(3),
-                                         budget=24 * nb, metric="l2")
+    batch_medoids = find_medoids_batch(sets, jax.random.key(3), metric="l2",
+                                       budget_per_arm=24)
     print(f"batched: {b} queries of n={nb} -> "
           f"{[int(m) for m in batch_medoids]}  {time.time() - t0:.2f}s")
 

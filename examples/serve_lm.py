@@ -5,7 +5,7 @@ LM serving and medoid identification share the serving pattern: many
 independent queries, one device dispatch. ``--medoid-batch B`` answers B
 "representative selection" queries (each: pick the medoid of a candidate
 embedding set, e.g. for prompt-cache clustering or retrieval dedup) in a
-single ``corr_sh_medoid_batch`` call on the selected distance backend.
+single ``repro.api.find_medoids_batch`` call on the selected distance backend.
 
     PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
     PYTHONPATH=src python examples/serve_lm.py --medoid-batch 8 \
@@ -17,7 +17,8 @@ import time
 
 import jax
 
-from repro.core import corr_sh_medoid_batch, list_backends
+from repro.api import find_medoids_batch
+from repro.core import list_backends
 from repro.launch.serve import Request, Server
 
 
@@ -28,9 +29,9 @@ def serve_medoid_queries(batch: int, backend: str, *, n: int = 512,
     key = jax.random.key(seed)
     sets = jax.random.normal(jax.random.fold_in(key, 1), (batch, n, d))
     t0 = time.time()
-    medoids = corr_sh_medoid_batch(sets, jax.random.fold_in(key, 2),
-                                   budget=budget_per_arm * n,
-                                   metric="cosine", backend=backend)
+    medoids = find_medoids_batch(sets, jax.random.fold_in(key, 2),
+                                 budget_per_arm=budget_per_arm,
+                                 metric="cosine", backend=backend)
     medoids = [int(m) for m in medoids]
     return {"queries": batch, "n": n, "d": d, "backend": backend,
             "medoids": medoids, "batch_s": round(time.time() - t0, 3)}

@@ -7,19 +7,19 @@ clustering problem. This module builds the full pipeline out of the layers
 the repo already has, instead of re-deriving any of them:
 
 * **BUILD** (greedy seeding): k correlated-SH argmin problems. Step 0 *is*
-  the single-medoid problem and literally calls
-  :func:`repro.core.corr_sh.corr_sh_medoid` (so a k=1 BUILD is bit-identical
-  to the paper engine by construction). Steps t >= 1 run the same static
-  round schedule with the BanditPAM BUILD estimator: an arm i's value over a
-  shared reference draw J is ``sum_{j in J} min(d1_j, d(x_i, x_j))`` where
-  ``d1`` is the cached distance to the nearest already-chosen medoid — the
-  correlation trick applies unchanged because all arms share J (and the
-  ``d1_J`` gather).
+  the single-medoid problem and literally calls the same jitted single-query
+  engine as :func:`repro.api.find_medoid` (so a k=1 BUILD is bit-identical
+  to the paper engine by construction). Steps t >= 1 run
+  :func:`repro.engine.run_halving` with the BanditPAM ``build_delta``
+  estimator: an arm i's value over a shared reference draw J is
+  ``sum_{j in J} min(d1_j, d(x_i, x_j))`` where ``d1`` is the cached
+  distance to the nearest already-chosen medoid — the correlation trick
+  applies unchanged because all arms share J (and the ``d1_J`` gather).
 
 * **Ragged per-cluster refinement**: alternate-style sweeps. Each cluster's
   medoid update is a pure single-medoid problem over its members, and
   cluster sizes are heterogeneous — so the per-cluster subproblems are
-  routed through :func:`repro.core.corr_sh.corr_sh_medoid_ragged` via the
+  routed through :func:`repro.core.corr_sh.ragged_medoids` via the
   power-of-two bucketing planner (clusters are just another ragged traffic
   source; the compile odometer bounds hold here too). Per-cluster caching:
   only clusters whose membership changed since the previous sweep recompute.
@@ -48,7 +48,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Callable, Optional
 
 import jax
@@ -58,8 +57,10 @@ import numpy as np
 from repro.core import (get_backend, plan_buckets, pack_queries,
                         round_schedule, schedule_pulls)
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, next_pow2
-from repro.core.corr_sh import (_resolve_select_fn, _sample_refs,
-                                corr_sh_medoid, corr_sh_medoid_ragged)
+from repro.core.corr_sh import _medoid_impl, ragged_medoids
+from repro.deprecation import warn_once
+from repro.engine import (HalvingProblem, build_delta, run_halving,
+                          swap_delta)
 
 # refiner hook: (cluster member arrays, key) -> (local medoid indices, pulls).
 # The default runs bucketed ragged dispatches in-process; the service layer
@@ -93,29 +94,14 @@ class KMedoidsResult:
 def _build_step(data: jnp.ndarray, d1: jnp.ndarray, chosen: jnp.ndarray,
                 key: jax.Array, *, budget: int, metric: str,
                 backend: str) -> jnp.ndarray:
-    """One BUILD greedy step as a correlated-SH argmin: the same static
-    round schedule and shared reference draws as ``_run_rounds``, with the
-    BanditPAM BUILD estimator ``sum_j min(d1_j, d(i, j))`` (the cached
+    """One BUILD greedy step: ``run_halving`` with the BanditPAM
+    ``build_delta`` estimator (``sum_j min(d1_j, d(i, j))`` — the cached
     nearest-medoid distance caps every reference's contribution). Arms
-    already chosen as medoids are masked to +inf."""
-    n = data.shape[0]
-    rounds = round_schedule(n, budget)
-    pw = get_backend(backend).pairwise(metric)
-    select_fn = _resolve_select_fn(backend)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    arm_ok = ~chosen
-    theta = None
-    for rd in rounds:
-        key, sub = jax.random.split(key)
-        refs = _sample_refs(sub, n, rd.num_refs)
-        blk = pw(data[idx], data[refs])                       # (s_r, t_r)
-        sums = jnp.sum(jnp.minimum(blk, d1[refs][None, :]), axis=1)
-        theta = jnp.where(arm_ok[idx], sums / refs.shape[0], jnp.inf)
-        if rd.exact or idx.shape[0] <= 2:
-            return idx[jnp.argmin(theta)]
-        keep = math.ceil(idx.shape[0] / 2)
-        idx = idx[select_fn(theta, keep)]
-    return idx[jnp.argmin(theta)]
+    already chosen as medoids are masked out via ``arm_mask``."""
+    rounds = round_schedule(data.shape[0], budget)
+    problem = HalvingProblem(data, build_delta(backend, metric, d1=d1),
+                             arm_mask=~chosen)
+    return run_halving(problem, rounds, backend, key=key).winner
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "backend"))
@@ -144,35 +130,18 @@ _top2 = jax.jit(_top2_of)
 def _swap_argmin(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
                  nearest: jnp.ndarray, chosen: jnp.ndarray, key: jax.Array,
                  *, budget: int, k: int, metric: str, backend: str):
-    """One correlated-SH pass over swap-in candidates. Returns
-    ``(candidate, medoid slot, estimated per-reference delta)`` for the best
-    (candidate, slot) pair under the FasterPAM decomposition — every round's
-    shared reference draw prices all k swaps of every surviving candidate."""
-    n = data.shape[0]
-    rounds = round_schedule(n, budget)
-    pw = get_backend(backend).pairwise(metric)
-    select_fn = _resolve_select_fn(backend)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    arm_ok = ~chosen
-    theta = delta = None
-    for rd in rounds:
-        key, sub = jax.random.split(key)
-        refs = _sample_refs(sub, n, rd.num_refs)
-        blk = pw(data[idx], data[refs])                       # (C, t)
-        d1r, d2r = d1[refs][None, :], d2[refs][None, :]
-        gain = jnp.minimum(blk - d1r, 0.0)                    # (C, t)
-        term = jnp.minimum(blk, d2r) - d1r - gain             # (C, t)
-        onehot = jax.nn.one_hot(nearest[refs], k, dtype=blk.dtype)  # (t, k)
-        delta = jnp.sum(gain, axis=1, keepdims=True) + term @ onehot  # (C, k)
-        best = jnp.min(delta, axis=1)
-        theta = jnp.where(arm_ok[idx], best / refs.shape[0], jnp.inf)
-        if rd.exact or idx.shape[0] <= 2:
-            break
-        keep = math.ceil(idx.shape[0] / 2)
-        idx = idx[select_fn(theta, keep)]
-    c_pos = jnp.argmin(theta)
-    slot = jnp.argmin(delta[c_pos]).astype(jnp.int32)
-    return idx[c_pos], slot, theta[c_pos]
+    """One correlated-SH pass over swap-in candidates: ``run_halving`` with
+    the FasterPAM ``swap_delta`` estimator (one shared reference draw prices
+    all k swaps of every surviving candidate). Returns ``(candidate, medoid
+    slot, estimated per-reference delta)`` for the best pair — the winner's
+    ``(C, k)`` delta block rides the outcome's ``aux``."""
+    rounds = round_schedule(data.shape[0], budget)
+    problem = HalvingProblem(
+        data, swap_delta(backend, metric, d1=d1, d2=d2, nearest=nearest, k=k),
+        arm_mask=~chosen)
+    out = run_halving(problem, rounds, backend, key=key)
+    slot = jnp.argmin(out.aux[out.winner_pos]).astype(jnp.int32)
+    return out.winner, slot, out.theta[out.winner_pos]
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "backend"))
@@ -199,7 +168,7 @@ def make_direct_refiner(*, metric: str, backend: str, budget_per_arm: int,
                         min_bucket: int = DEFAULT_MIN_BUCKET) -> Refiner:
     """The in-process refiner: coalesce the cluster subproblems into
     power-of-two buckets and answer each bucket with ONE
-    ``corr_sh_medoid_ragged`` dispatch — heterogeneous cluster sizes share
+    ``ragged_medoids`` dispatch — heterogeneous cluster sizes share
     the per-bucket compiled programs with every other ragged traffic
     source. Per-bucket key: ``fold_in(key, n_bucket)``. Batch slots are
     padded to the next power of two (dummy length-1 queries), so the number
@@ -214,7 +183,7 @@ def make_direct_refiner(*, metric: str, backend: str, budget_per_arm: int,
             slots = next_pow2(len(group))
             packed, lens = pack_queries(group, min_bucket,
                                         pad_batch_to=slots)
-            meds = corr_sh_medoid_ragged(
+            meds = ragged_medoids(
                 packed, lens, jax.random.fold_in(key, nb),
                 budget=budget_per_arm * nb, metric=metric, backend=backend,
                 min_bucket=min_bucket)
@@ -230,14 +199,14 @@ def make_direct_refiner(*, metric: str, backend: str, budget_per_arm: int,
 # the full pipeline
 # --------------------------------------------------------------------------
 
-def bandit_kmedoids(data, k: int, key: jax.Array, *, metric: str = "l2",
-                    backend: str = "reference",
-                    build_budget_per_arm: int = 16,
-                    swap_budget_per_arm: int = 16,
-                    refine_budget_per_arm: int = 20,
-                    refine_sweeps: int = 1, max_swap_rounds: int = 8,
-                    min_bucket: int = DEFAULT_MIN_BUCKET,
-                    refiner: Optional[Refiner] = None) -> KMedoidsResult:
+def _kmedoids_impl(data, k: int, key: jax.Array, *, metric: str = "l2",
+                   backend: str = "reference",
+                   build_budget_per_arm: int = 16,
+                   swap_budget_per_arm: int = 16,
+                   refine_budget_per_arm: int = 20,
+                   refine_sweeps: int = 1, max_swap_rounds: int = 8,
+                   min_bucket: int = DEFAULT_MIN_BUCKET,
+                   refiner: Optional[Refiner] = None) -> KMedoidsResult:
     """BUILD -> ragged per-cluster refinement -> bandit SWAP.
 
     ``data (n, d)``; returns a :class:`KMedoidsResult` whose ``medoids`` are
@@ -275,8 +244,8 @@ def bandit_kmedoids(data, k: int, key: jax.Array, *, metric: str = "l2",
         kt = jax.random.fold_in(key_build, t)
         if t == 0:
             # the first step IS the paper's problem — same jitted entry point
-            m = int(corr_sh_medoid(data, kt, budget=build_budget,
-                                   metric=metric, backend=backend))
+            m = int(_medoid_impl(data, kt, budget=build_budget,
+                                 metric=metric, backend=backend))
         else:
             m = int(_build_step(data, d1, chosen, kt, budget=build_budget,
                                 metric=metric, backend=backend))
@@ -358,3 +327,10 @@ def bandit_kmedoids(data, k: int, key: jax.Array, *, metric: str = "l2",
         pulls=pulls, build_pulls=build_pulls, assign_pulls=assign_pulls,
         refine_pulls=refine_pulls, swap_pulls=swap_pulls, swaps=swaps,
         refine_updates=refine_updates, k=k, metric=metric, backend=backend)
+
+
+def bandit_kmedoids(data, k: int, key: jax.Array, **kwargs) -> KMedoidsResult:
+    """Deprecated: use :func:`repro.api.kmedoids` (same pipeline, config-
+    driven). Signature-compatible with the pre-facade entry point."""
+    warn_once("repro.cluster.kmedoids.bandit_kmedoids", "repro.api.kmedoids")
+    return _kmedoids_impl(data, k, key, **kwargs)

@@ -1,6 +1,6 @@
 """Clustering against the continuous-batching medoid service.
 
-The refinement phase of :func:`repro.cluster.kmedoids.bandit_kmedoids` is a
+The refinement phase of :func:`repro.api.kmedoids` is a
 stream of independent single-medoid queries with heterogeneous sizes — which
 is exactly the workload :class:`repro.launch.serve_medoid.MedoidServer`
 exists for. :class:`ServiceRefiner` adapts the refiner hook to submit each
@@ -15,7 +15,7 @@ from typing import Optional
 
 import jax
 
-from repro.cluster.kmedoids import KMedoidsResult, bandit_kmedoids
+from repro.cluster.kmedoids import KMedoidsResult, _kmedoids_impl
 
 
 class ServiceRefiner:
@@ -51,7 +51,7 @@ def kmedoids_via_service(data, k: int, key: jax.Array, *,
         srv = MedoidServer(metric=metric, backend=backend,
                            budget_per_arm=refine_budget_per_arm,
                            max_batch=max_batch)
-    result = bandit_kmedoids(data, k, key, metric=metric, backend=backend,
-                             refine_budget_per_arm=refine_budget_per_arm,
-                             refiner=ServiceRefiner(srv), **kwargs)
+    result = _kmedoids_impl(data, k, key, metric=metric, backend=backend,
+                            refine_budget_per_arm=refine_budget_per_arm,
+                            refiner=ServiceRefiner(srv), **kwargs)
     return result, srv

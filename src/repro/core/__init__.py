@@ -14,11 +14,13 @@ from repro.core.bucketing import (
 )
 from repro.core.corr_sh import (
     CorrSHResult,
+    Round,
     corr_sh_medoid,
     corr_sh_medoid_batch,
     corr_sh_medoid_ragged,
     correlated_sequential_halving,
     ragged_compile_count,
+    ragged_medoids,
     round_schedule,
     schedule_pulls,
 )
@@ -29,12 +31,13 @@ from repro.core.meddit import MedditResult, meddit_medoid
 from repro.core.rand import rand_medoid
 
 __all__ = [
-    "CorrSHResult", "DEFAULT_MIN_BUCKET", "DistanceBackend", "bucket_n",
+    "CorrSHResult", "DEFAULT_MIN_BUCKET", "DistanceBackend", "Round",
+    "bucket_n",
     "corr_sh_medoid", "corr_sh_medoid_batch", "corr_sh_medoid_ragged",
     "correlated_sequential_halving", "get_backend", "list_backends",
     "num_buckets_for_range", "pack_queries", "plan_buckets",
-    "ragged_compile_count", "register_backend", "round_schedule",
-    "schedule_pulls",
+    "ragged_compile_count", "ragged_medoids", "register_backend",
+    "round_schedule", "schedule_pulls",
     "METRICS", "full_distance_matrix", "pairwise", "exact_medoid",
     "exact_theta", "HardnessStats", "hardness_stats",
     "predicted_error_bound", "MedditResult", "meddit_medoid", "rand_medoid",

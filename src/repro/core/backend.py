@@ -46,8 +46,8 @@ On non-TPU hosts the Pallas backends transparently run in interpret mode
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Optional, Union
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Optional, Union
 
 import jax.numpy as jnp
 
@@ -78,6 +78,14 @@ class DistanceBackend:
     # step through it instead of the default XLA top_k — the last off-chip
     # step of a round stays on-chip. ``None`` = default selection.
     survivor_topk: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+    # Optional fused arm-loss estimator paths, keyed by estimator name
+    # ("medoid_centrality", "build_delta", "swap_delta", ...). Each value is
+    # a ``metric -> score-kernel`` factory; the estimator factories in
+    # :mod:`repro.engine.estimators` consult this mapping first and fall back
+    # to composing ``pairwise``/``centrality_sums``. This is how a backend
+    # ships, say, an in-VMEM BUILD-delta kernel without any engine changes.
+    fused_estimators: Mapping[str, Callable[[str], Callable]] = \
+        field(default_factory=dict)
 
 
 _REGISTRY: dict[str, DistanceBackend] = {}
@@ -143,12 +151,17 @@ register_backend(DistanceBackend(
     description="Pallas (C, R) block kernels + out-of-kernel row sum",
 ))
 
+# The fused centrality kernels double as the fused ``medoid_centrality``
+# estimator path (same contract: (x, y, ref_mask=) -> (C,) sums in-kernel).
+_FUSED_ESTIMATORS = {"medoid_centrality": kops.centrality_kernel}
+
 register_backend(DistanceBackend(
     name="pallas_fused",
     pairwise=kops.pairwise_kernel,
     centrality_sums=kops.centrality_kernel,
     materializes_block=False,
     description="fused in-kernel reference reduction (no (C, R) in HBM)",
+    fused_estimators=_FUSED_ESTIMATORS,
 ))
 
 
@@ -163,4 +176,5 @@ register_backend(DistanceBackend(
     materializes_block=False,
     description="pallas_fused + on-chip top-k survivor-selection epilogue",
     survivor_topk=_topk_epilogue,
+    fused_estimators=_FUSED_ESTIMATORS,
 ))

@@ -1,27 +1,30 @@
-"""Correlated Sequential Halving (Algorithm 1 of the paper).
+"""Correlated Sequential Halving (Algorithm 1 of the paper) — engine adapters.
 
-The crucial systems observation: given ``(n, budget)``, the per-round sizes
+As of PR 4 the round loop itself lives in :mod:`repro.engine.halving`
+(:func:`~repro.engine.run_halving`, parameterized by an
+:class:`~repro.engine.ArmEstimator`); this module keeps the paper-facing
+medoid entry points as thin adapters over it:
 
-    s_r  = |S_r|   (number of surviving arms)
-    t_r  = clip(floor(budget / (s_r * ceil(log2 n))), 1, n)
+* :func:`correlated_sequential_halving` — the research-level function
+  returning the full :class:`CorrSHResult` (medoid, pulls, rounds, final
+  estimates);
+* ``_medoid_impl`` / ``_batch_impl`` / :func:`ragged_medoids` — the jitted
+  internal implementations the facade (:mod:`repro.api`), the serving layer,
+  and the clustering refiners dispatch to;
+* :func:`corr_sh_medoid`, :func:`corr_sh_medoid_batch`,
+  :func:`corr_sh_medoid_ragged` — the pre-facade public names, kept
+  signature-compatible as deprecated shims (one ``DeprecationWarning`` per
+  process; use :mod:`repro.api`).
 
-are *deterministic Python integers* — so every round's distance block
-``(s_r, t_r)`` has a static shape and the entire algorithm traces into a single
-XLA program (the Python loop over rounds unrolls). No dynamic shapes, no host
-round-trips, no data-dependent control flow except the final ``t_r == n``
-exact-output branch, which is also static.
-
-Faithful to the paper:
-  * shared reference set per round (the correlation trick),
-  * sampling without replacement (permutation prefix),
-  * survivors = ceil(|S_r| / 2) arms with smallest estimates,
-  * if t_r == n the round's estimates are exact -> output argmin immediately.
+Everything the old in-module loops guaranteed still holds — static shapes
+from :func:`~repro.engine.schedule.round_schedule`, shared per-round
+reference draws, bit-exact full-bucket parity between the ragged and dense
+paths — and is now pinned against verbatim pre-refactor loop snapshots by
+``tests/test_engine.py``.
 """
 from __future__ import annotations
 
 import functools
-import inspect
-import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
 
@@ -29,50 +32,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances
-from repro.core.backend import DistanceBackend, get_backend
+from repro.core.backend import DistanceBackend
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n
+from repro.deprecation import warn_once
+from repro.engine import (HalvingProblem, Round, medoid_centrality,
+                          resolve_select_fn, round_schedule, run_halving,
+                          schedule_pulls)
 
 PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 BackendLike = Union[str, DistanceBackend, None]
 
-
-@dataclass(frozen=True)
-class Round:
-    """Static per-round schedule entry."""
-    survivors: int   # s_r going *into* the round
-    num_refs: int    # t_r
-    exact: bool      # t_r == n -> estimates are exact, output now
-
-    @property
-    def pulls(self) -> int:
-        return self.survivors * self.num_refs
-
-
-def round_schedule(n: int, budget: int) -> list[Round]:
-    """The paper's deterministic round schedule for (n, budget)."""
-    if n < 1:
-        raise ValueError("need at least one point")
-    if n == 1:
-        return []
-    log2n = max(1, math.ceil(math.log2(n)))
-    rounds: list[Round] = []
-    s = n
-    for _ in range(log2n):
-        t = min(max(budget // (s * log2n), 1), n)
-        exact = t >= n
-        rounds.append(Round(survivors=s, num_refs=t, exact=exact))
-        if exact or s <= 1:
-            break
-        s = math.ceil(s / 2)
-        if s == 1:
-            break
-    return rounds
-
-
-def schedule_pulls(n: int, budget: int) -> int:
-    """Total distance computations the schedule will actually perform."""
-    return sum(r.pulls for r in round_schedule(n, budget))
+__all__ = [
+    "CorrSHResult", "Round", "corr_sh_medoid", "corr_sh_medoid_batch",
+    "corr_sh_medoid_ragged", "correlated_sequential_halving",
+    "ragged_compile_count", "ragged_medoids", "round_schedule",
+    "schedule_pulls",
+]
 
 
 @dataclass
@@ -81,64 +56,6 @@ class CorrSHResult:
     pulls: int                          # total distance computations (static)
     rounds: list[Round] = field(default_factory=list)
     theta_hat: Optional[jnp.ndarray] = None  # final-round estimates
-
-
-def _sample_refs(key: jax.Array, n: int, t: int) -> jnp.ndarray:
-    """t reference indices, uniform without replacement (permutation prefix)."""
-    if t >= n:
-        return jnp.arange(n, dtype=jnp.int32)
-    return jax.random.permutation(key, n)[:t].astype(jnp.int32)
-
-
-def _resolve_theta_fn(metric: str, pairwise_fn: Optional[PairwiseFn],
-                      backend: BackendLike) -> Callable:
-    """Per-round estimator ``theta_fn(cand, refs) -> (C,)`` *sums* of
-    distances (divide by t_r for the mean)."""
-    if pairwise_fn is not None:
-        return lambda x, y: jnp.sum(pairwise_fn(x, y), axis=1)
-    return get_backend(backend).centrality_sums(metric)
-
-
-def _default_select(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
-    """Survivor selection: indices of the ``keep`` smallest estimates,
-    ascending, ties stable toward the smaller index (top_k on negated
-    values, static k)."""
-    return jax.lax.top_k(-theta, keep)[1]
-
-
-def _resolve_select_fn(backend: BackendLike) -> Callable:
-    """The halving step's top-k: a backend with a fused survivor-selection
-    epilogue (``survivor_topk``, e.g. ``pallas_fused_topk``) keeps it
-    on-chip; everyone else gets the default XLA top_k. Both have identical
-    stable-tie semantics, so the choice never changes survivors."""
-    fn = get_backend(backend).survivor_topk
-    return fn if fn is not None else _default_select
-
-
-def _run_rounds(data: jnp.ndarray, key: jax.Array, rounds: list[Round],
-                n: int, theta_fn: Callable,
-                select_fn: Callable = _default_select):
-    """The round loop as a pure array program: static shapes only, no Python
-    state in the return value — safe under ``jax.vmap`` (the batched engine
-    maps this exact function over a leading batch axis).
-
-    Returns ``(medoid, theta_hat, r_stop)`` where ``r_stop`` is the (static)
-    index of the round that produced the output.
-    """
-    idx = jnp.arange(n, dtype=jnp.int32)  # surviving arm indices, shrinks per round
-    theta_hat = None
-    for r, rd in enumerate(rounds):
-        key, sub = jax.random.split(key)
-        refs = _sample_refs(sub, n, rd.num_refs)
-        cand_rows = data[idx]                  # (s_r, d)  static gather
-        ref_rows = data[refs]                  # (t_r, d)
-        theta_hat = theta_fn(cand_rows, ref_rows) / ref_rows.shape[0]  # (s_r,)
-        if rd.exact or idx.shape[0] <= 2:
-            # exact estimates (t_r == n) or nothing left to halve: output argmin
-            return idx[jnp.argmin(theta_hat)], theta_hat, r
-        keep = math.ceil(idx.shape[0] / 2)
-        idx = idx[select_fn(theta_hat, keep)]   # smallest-theta half survives
-    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
 
 
 def correlated_sequential_halving(
@@ -153,38 +70,38 @@ def correlated_sequential_halving(
 
     ``backend`` selects the distance implementation from the registry in
     :mod:`repro.core.backend` (``"reference"``, ``"pallas_pairwise"``,
-    ``"pallas_fused"``). ``pairwise_fn`` still overrides the distance block
-    directly (legacy hook; takes precedence over ``backend``).
+    ``"pallas_fused"``, ``"pallas_fused_topk"``). ``pairwise_fn`` still
+    overrides the distance block directly (legacy hook; takes precedence
+    over ``backend``).
     """
     n = int(data.shape[0])
     rounds = round_schedule(n, budget)
     if not rounds:  # n == 1
         return CorrSHResult(medoid=jnp.zeros((), jnp.int32), pulls=0)
-    theta_fn = _resolve_theta_fn(metric, pairwise_fn, backend)
-    select_fn = _resolve_select_fn(backend)
-    medoid, theta_hat, r_stop = _run_rounds(data, key, rounds, n, theta_fn,
-                                            select_fn)
+    problem = HalvingProblem(
+        data, medoid_centrality(backend, metric, pairwise_fn=pairwise_fn))
+    out = run_halving(problem, rounds, backend, key=key)
     return CorrSHResult(
-        medoid=medoid,
-        pulls=sum(x.pulls for x in rounds[: r_stop + 1]),
-        rounds=rounds[: r_stop + 1],
-        theta_hat=theta_hat,
+        medoid=out.winner,
+        pulls=sum(x.pulls for x in rounds[: out.r_stop + 1]),
+        rounds=rounds[: out.r_stop + 1],
+        theta_hat=out.theta,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
-def corr_sh_medoid(data: jnp.ndarray, key: jax.Array, *, budget: int,
-                   metric: str = "l2",
-                   backend: str = "reference") -> jnp.ndarray:
-    """Jitted entry point returning just the medoid index."""
+def _medoid_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                 metric: str = "l2",
+                 backend: str = "reference") -> jnp.ndarray:
+    """Jitted single-query medoid (the facade's ``find_medoid`` kernel)."""
     return correlated_sequential_halving(data, budget, key, metric,
                                          backend=backend).medoid
 
 
 @functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
-def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
-                         metric: str = "l2",
-                         backend: str = "reference") -> jnp.ndarray:
+def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                metric: str = "l2",
+                backend: str = "reference") -> jnp.ndarray:
     """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices.
 
     All queries share one static round schedule (shapes depend only on
@@ -201,11 +118,12 @@ def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
     keys = jax.random.split(key, b)
     if not rounds:  # n == 1
         return jnp.zeros((b,), jnp.int32)
-    theta_fn = _resolve_theta_fn(metric, None, backend)
-    select_fn = _resolve_select_fn(backend)
+    est = medoid_centrality(backend, metric)
+    select_fn = resolve_select_fn(backend)
 
     def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        return _run_rounds(x, k, rounds, n, theta_fn, select_fn)[0]
+        return run_halving(HalvingProblem(x, est), rounds, key=k,
+                           survivor_topk=select_fn).winner
 
     return jax.vmap(one)(data, keys)
 
@@ -213,69 +131,6 @@ def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
 # ---------------------------------------------------------------------------
 # ragged multi-query engine: per-query n via padding + validity masking
 # ---------------------------------------------------------------------------
-
-def _sample_refs_masked(key: jax.Array, n: int, t: int,
-                        valid: jnp.ndarray) -> jnp.ndarray:
-    """t reference indices favoring valid points: a uniform permutation of
-    [0, n) stably partitioned so valid indices come first (still in random
-    order — sampling without replacement among the valid points), invalid
-    ones trail. When every point is valid this is exactly ``_sample_refs``
-    (the stable partition of an all-zero rank is the identity), which is what
-    makes the ragged engine bit-identical to the dense one on full buckets.
-    """
-    if t >= n:
-        return jnp.arange(n, dtype=jnp.int32)
-    perm = jax.random.permutation(key, n).astype(jnp.int32)
-    order = jnp.argsort(jnp.where(valid[perm], 0, 1))  # jnp sort is stable
-    return perm[order][:t]
-
-
-def _resolve_masked_theta_fn(metric: str, backend: BackendLike) -> Callable:
-    """Mask-aware per-round estimator ``fn(cand, refs, ref_mask) -> (C,)``
-    sums over the *valid* references only. Built-in backends take ``ref_mask``
-    natively (the fused kernels apply it in VMEM); for a registered backend
-    that predates the keyword, fall back to masking its pairwise block."""
-    be = get_backend(backend)
-    fn = be.centrality_sums(metric)
-    try:
-        params = inspect.signature(fn).parameters
-        mask_native = "ref_mask" in params or any(
-            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
-    except (TypeError, ValueError):   # builtins / odd callables: probe-free
-        mask_native = False
-    if mask_native:
-        return lambda x, y, m: fn(x, y, ref_mask=m)
-    pw = be.pairwise(metric)
-    return lambda x, y, m: distances.masked_rowsum(pw(x, y), m)
-
-
-def _run_rounds_masked(data: jnp.ndarray, valid: jnp.ndarray, key: jax.Array,
-                       rounds: list[Round], n: int, theta_fn: Callable,
-                       select_fn: Callable = _default_select):
-    """The round loop of ``_run_rounds`` generalized to a validity mask.
-
-    ``valid: (n,) bool`` marks real points; padded arms get +inf estimates
-    (never survive a halving ahead of any real arm, never win the argmin) and
-    contribute nothing as references (masked inside the distance path;
-    estimates divide by the drawn *valid* count). On an all-valid query every
-    array this computes is identical to ``_run_rounds`` — the parity the
-    ragged tests pin down.
-    """
-    idx = jnp.arange(n, dtype=jnp.int32)   # surviving arm indices
-    theta_hat = None
-    for r, rd in enumerate(rounds):
-        key, sub = jax.random.split(key)
-        refs = _sample_refs_masked(sub, n, rd.num_refs, valid)
-        ref_mask = valid[refs].astype(jnp.float32)          # (t_r,)
-        sums = theta_fn(data[idx], data[refs], ref_mask)    # (s_r,) valid sums
-        denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
-        theta_hat = jnp.where(valid[idx], sums / denom, jnp.inf)
-        if rd.exact or idx.shape[0] <= 2:
-            return idx[jnp.argmin(theta_hat)], theta_hat, r
-        keep = math.ceil(idx.shape[0] / 2)
-        idx = idx[select_fn(theta_hat, keep)]
-    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
-
 
 # Compilation odometer: bumped at *trace* time, i.e. exactly once per XLA
 # program the ragged engine compiles. The bucketing invariants ("a sweep over
@@ -302,20 +157,24 @@ def _ragged_impl(data: jnp.ndarray, lengths: jnp.ndarray, key: jax.Array, *,
         return jnp.zeros((b,), jnp.int32)
     valid = jnp.arange(n_bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
     keys = jax.random.split(key, b)
-    theta_fn = _resolve_masked_theta_fn(metric, backend)
-    select_fn = _resolve_select_fn(backend)
+    est = medoid_centrality(backend, metric)
+    select_fn = resolve_select_fn(backend)
 
     def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        return _run_rounds_masked(x, v, k, rounds, n_bucket, theta_fn,
-                                  select_fn)[0]
+        # padded arms: ineligible to win (arm_mask) AND dropped from every
+        # reference draw / denominator (ref_mask) — one validity mask plays
+        # both roles, exactly as the old masked loop did.
+        problem = HalvingProblem(x, est, arm_mask=v, ref_mask=v)
+        return run_halving(problem, rounds, key=k,
+                           survivor_topk=select_fn).winner
 
     return jax.vmap(one)(data, valid, keys)
 
 
-def corr_sh_medoid_ragged(data: jnp.ndarray, lengths, key: jax.Array, *,
-                          budget: int, metric: str = "l2",
-                          backend: str = "reference",
-                          min_bucket: int = DEFAULT_MIN_BUCKET) -> jnp.ndarray:
+def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
+                   budget: int, metric: str = "l2",
+                   backend: str = "reference",
+                   min_bucket: int = DEFAULT_MIN_BUCKET) -> jnp.ndarray:
     """Ragged multi-query medoid: ``data (B, n_max, d)`` + per-query
     ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length).
 
@@ -326,7 +185,7 @@ def corr_sh_medoid_ragged(data: jnp.ndarray, lengths, key: jax.Array, *,
     in-round validity masking — padded arms take +inf centrality and are
     never counted as references. A query occupying its full bucket
     (``length == n_bucket``) follows the exact same schedule, reference draws
-    and arithmetic as ``corr_sh_medoid(data[i], split(key, B)[i], ...)``.
+    and arithmetic as a single-query ``find_medoid(data[i], split(key, B)[i])``.
 
     Raises ``ValueError`` on an all-padding query (``length < 1``) or a
     length exceeding ``n_max`` — rejected at admission, before any dispatch.
@@ -356,3 +215,37 @@ def corr_sh_medoid_ragged(data: jnp.ndarray, lengths, key: jax.Array, *,
         data = jnp.pad(data, ((0, 0), (0, n_bucket - data.shape[1]), (0, 0)))
     return _ragged_impl(data, lengths, key, budget=budget, metric=metric,
                         backend=backend, n_bucket=n_bucket)
+
+
+# ---------------------------------------------------------------------------
+# deprecated pre-facade entry points (use repro.api)
+# ---------------------------------------------------------------------------
+
+def corr_sh_medoid(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                   metric: str = "l2",
+                   backend: str = "reference") -> jnp.ndarray:
+    """Deprecated: use :func:`repro.api.find_medoid`."""
+    warn_once("repro.core.corr_sh.corr_sh_medoid", "repro.api.find_medoid")
+    return _medoid_impl(data, key, budget=budget, metric=metric,
+                        backend=backend)
+
+
+def corr_sh_medoid_batch(data: jnp.ndarray, key: jax.Array, *, budget: int,
+                         metric: str = "l2",
+                         backend: str = "reference") -> jnp.ndarray:
+    """Deprecated: use :func:`repro.api.find_medoids_batch`."""
+    warn_once("repro.core.corr_sh.corr_sh_medoid_batch",
+              "repro.api.find_medoids_batch")
+    return _batch_impl(data, key, budget=budget, metric=metric,
+                       backend=backend)
+
+
+def corr_sh_medoid_ragged(data: jnp.ndarray, lengths, key: jax.Array, *,
+                          budget: int, metric: str = "l2",
+                          backend: str = "reference",
+                          min_bucket: int = DEFAULT_MIN_BUCKET) -> jnp.ndarray:
+    """Deprecated: use :func:`repro.api.find_medoids_ragged`."""
+    warn_once("repro.core.corr_sh.corr_sh_medoid_ragged",
+              "repro.api.find_medoids_ragged")
+    return ragged_medoids(data, lengths, key, budget=budget, metric=metric,
+                          backend=backend, min_bucket=min_bucket)

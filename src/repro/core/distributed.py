@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.backend import get_backend
-from repro.core.corr_sh import round_schedule
+from repro.engine import default_select, round_schedule
 
 try:
     # jax >= 0.6: shard_map is a public API and the replication check is
@@ -150,8 +150,10 @@ def _distributed_corr_sh_impl(
             if rd.exact or s <= 2:
                 return idx[jnp.argmin(theta_hat)]
             keep = math.ceil(s / 2)
-            _, order = jax.lax.top_k(-theta_hat, keep)
-            idx = idx[order]
+            # replicated halving: same stable-tie selection as the unified
+            # engine (repro.engine.default_select), so distributed survivors
+            # match the single-host engine's round for round
+            idx = idx[default_select(theta_hat, keep)]
         return idx[jnp.argmin(theta_hat)]
 
     specs = P(axes)  # rows sharded over all axes jointly

@@ -48,8 +48,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.backend import get_backend
-from repro.core.corr_sh import round_schedule
 from repro.core.distributed import shard_map
+from repro.engine import default_select, round_schedule
 
 
 def _round_up(x: int, m: int) -> int:
@@ -69,7 +69,7 @@ def survivor_keep_mask(theta_global: jnp.ndarray, keep: int,
     mask over this shard's ``n_local`` rows and the global top-k indices.
     """
     n = theta_global.shape[0]
-    _, order = jax.lax.top_k(-theta_global, keep)
+    order = default_select(theta_global, keep)
     keep_global = jnp.zeros((n,), bool).at[order].set(True)
     local = jax.lax.dynamic_slice_in_dim(keep_global, offset, n_local)
     return local, order.astype(jnp.int32)
@@ -159,8 +159,7 @@ def make_distributed_corr_sh_v2(mesh: Mesh, *, n: int, d: int, budget: int,
                 if rd.exact or s <= 2:
                     return surv_idx[jnp.argmin(theta)]
                 keep = math.ceil(s / 2)
-                _, order = jax.lax.top_k(-theta, keep)
-                surv_idx = surv_idx[order]
+                surv_idx = surv_idx[default_select(theta, keep)]
 
         if surv_idx is not None:
             return surv_idx[0]

@@ -6,6 +6,11 @@ pulled per step, each with its own independent reference), which preserves the
 independent-sampling statistics the paper contrasts against while remaining
 accelerator-friendly. Fixed-confidence stopping a la UCB for minimum
 identification: stop when UCB(best) <= LCB(every other arm).
+
+Reachable through the facade as ``repro.api.find_medoid(x, key,
+algo="meddit")`` — UCB is a *different bandit strategy* (adaptive
+per-arm pull counts, independent references), so unlike BUILD/SWAP it is an
+alternative to the halving engine rather than an estimator plugged into it.
 """
 from __future__ import annotations
 

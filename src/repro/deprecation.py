@@ -1,0 +1,26 @@
+"""Warn-once deprecation shims for the pre-``repro.api`` entry points.
+
+The PR-4 facade (:mod:`repro.api`) is the documented surface; the old
+per-module entry points keep working but emit one :class:`DeprecationWarning`
+per process (Python's default warning registry dedupes per call site, which
+under-reports across modules — the explicit set here makes "exactly once per
+entry point" testable, see ``tests/test_api.py``)."""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    """Emit a DeprecationWarning for ``old`` (qualified name) once per
+    process, pointing at its ``repro.api`` replacement."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(f"{old} is deprecated; use {new} instead",
+                  DeprecationWarning, stacklevel=3)
+
+
+def _reset_for_tests() -> None:
+    _WARNED.clear()

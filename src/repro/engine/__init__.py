@@ -1,0 +1,37 @@
+"""One bandit engine: the estimator-parameterized correlated-SH round loop.
+
+Medoid identification, k-medoids BUILD, and k-medoids SWAP are the same
+bandit argmin with different arm-loss estimators — this package is that
+sentence as code. :func:`run_halving` is the single round loop (masking,
+batching, fused top-k, static schedules); :mod:`repro.engine.estimators`
+holds the pluggable scoring protocol; :mod:`repro.engine.schedule` the
+paper's deterministic round schedule. The stable user-facing entry points
+live one level up in :mod:`repro.api`.
+"""
+from repro.engine.estimators import (
+    ArmEstimator,
+    build_delta,
+    get_estimator,
+    list_estimators,
+    medoid_centrality,
+    register_estimator,
+    swap_delta,
+)
+from repro.engine.halving import (
+    HalvingOutcome,
+    HalvingProblem,
+    default_select,
+    resolve_select_fn,
+    run_halving,
+    sample_refs,
+    sample_refs_masked,
+)
+from repro.engine.schedule import Round, round_schedule, schedule_pulls, stop_round
+
+__all__ = [
+    "ArmEstimator", "HalvingOutcome", "HalvingProblem", "Round",
+    "build_delta", "default_select", "get_estimator", "list_estimators",
+    "medoid_centrality", "register_estimator", "resolve_select_fn",
+    "round_schedule", "run_halving", "sample_refs", "sample_refs_masked",
+    "schedule_pulls", "stop_round", "swap_delta",
+]

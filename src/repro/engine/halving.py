@@ -1,0 +1,195 @@
+"""THE correlated-SH round loop — one copy, estimator-parameterized.
+
+Before PR 4 the skeleton (draw shared references -> score every surviving
+arm -> halve via top-k) existed four times, once per workload: single-query
+medoid, masked/ragged medoid, k-medoids BUILD, k-medoids SWAP. BanditPAM
+(Tiwari et al., 2020/2023) frames all of these as the *same* bandit argmin
+with different arm-loss estimators, and :func:`run_halving` says that in
+code: the workload plugs in an :class:`~repro.engine.estimators.ArmEstimator`
+and inherits masking, vmapped batching, the fused top-k epilogue, and the
+static-shape/one-XLA-program property for free.
+
+Unified semantics, pinned by ``tests/test_engine.py`` against verbatim
+snapshots of the four pre-refactor loops (``tests/_legacy_loops.py``):
+
+* **key folding**: one sequential ``key, sub = jax.random.split(key)`` per
+  round (the audit of the four copies found they all agreed; the distributed
+  engines use ``fold_in(key, r)`` instead — a documented, pre-existing
+  divergence that is per-engine deterministic and unchanged here);
+* **reference draws**: uniform without replacement via permutation prefix
+  (:func:`sample_refs`); with a ``ref_mask``, the valid-first stable
+  partition (:func:`sample_refs_masked`) which degenerates to the unmasked
+  draw when every point is valid — the full-bucket bit-exactness theorem;
+* **estimates**: the estimator returns raw per-arm *sums*; the engine
+  divides by the (static) reference count, or by the drawn *valid* count
+  under a ``ref_mask``;
+* **arm masking**: ineligible arms (padding, already-chosen medoids) take
+  ``+inf`` estimates — they never survive a halving ahead of an eligible arm
+  and never win the final argmin;
+* **tie-break**: survivor selection and the final argmin resolve ties toward
+  the smaller index (``jax.lax.top_k`` on negated values / ``argmin``), for
+  every backend including the fused on-chip top-k.
+
+The loop is a pure array program with static shapes only — safe under
+``jax.vmap`` (the batched and ragged engines map it over a leading batch
+axis) and under ``jax.jit`` (the Python loop over rounds unrolls; the
+early-out branch is static, see :func:`repro.engine.schedule.stop_round`).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.schedule import Round
+
+if TYPE_CHECKING:   # repro.core is imported lazily (see resolve_select_fn)
+    from repro.core.backend import DistanceBackend
+    from repro.engine.estimators import ArmEstimator
+
+BackendLike = Union[str, "DistanceBackend", None]
+SelectFn = Callable[[jnp.ndarray, int], jnp.ndarray]
+
+
+# ----------------------------- reference draws ------------------------------
+
+def sample_refs(key: jax.Array, n: int, t: int) -> jnp.ndarray:
+    """t reference indices, uniform without replacement (permutation prefix)."""
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    return jax.random.permutation(key, n)[:t].astype(jnp.int32)
+
+
+def sample_refs_masked(key: jax.Array, n: int, t: int,
+                       valid: jnp.ndarray) -> jnp.ndarray:
+    """t reference indices favoring valid points: a uniform permutation of
+    [0, n) stably partitioned so valid indices come first (still in random
+    order — sampling without replacement among the valid points), invalid
+    ones trail. When every point is valid this is exactly ``sample_refs``
+    (the stable partition of an all-zero rank is the identity), which is what
+    makes the masked engine bit-identical to the dense one on full buckets.
+    """
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    perm = jax.random.permutation(key, n).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(valid[perm], 0, 1))  # jnp sort is stable
+    return perm[order][:t]
+
+
+# --------------------------- survivor selection -----------------------------
+
+def default_select(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Survivor selection: indices of the ``keep`` smallest estimates,
+    ascending, ties stable toward the smaller index (top_k on negated
+    values, static k)."""
+    return jax.lax.top_k(-theta, keep)[1]
+
+
+def resolve_select_fn(backend: BackendLike) -> SelectFn:
+    """The halving step's top-k: a backend with a fused survivor-selection
+    epilogue (``survivor_topk``, e.g. ``pallas_fused_topk``) keeps it
+    on-chip; everyone else gets the default XLA top_k. Both have identical
+    stable-tie semantics, so the choice never changes survivors."""
+    # Imported at call (trace) time: the engine package sits BELOW repro.core
+    # in the layering — repro.core.__init__ pulls in corr_sh, which is built
+    # on this module, so a module-level import here would be circular.
+    from repro.core.backend import get_backend
+
+    fn = get_backend(backend).survivor_topk
+    return fn if fn is not None else default_select
+
+
+# ------------------------------- the engine ---------------------------------
+
+@dataclass(frozen=True)
+class HalvingProblem:
+    """One bandit-argmin instance: the arms, how pulls score, who's eligible.
+
+    ``data``
+        ``(n, d)`` arm rows; row i is both arm i and (potential) reference i.
+    ``estimator``
+        The :class:`ArmEstimator` scoring a reference batch per arm.
+    ``arm_mask``
+        Optional ``(n,)`` bool — arms eligible to survive / win (``False``
+        arms take ``+inf`` estimates). ``None`` = all eligible, and no
+        masking ops are traced at all (the dense path stays bit-identical).
+    ``ref_mask``
+        Optional ``(n,)`` bool — points eligible as references. Draws use the
+        valid-first partition, estimator sums are restricted to drawn valid
+        references, and estimates divide by the drawn *valid* count. ``None``
+        = every point may serve as a reference (static denominator).
+    """
+    data: jnp.ndarray
+    estimator: ArmEstimator
+    arm_mask: Optional[jnp.ndarray] = None
+    ref_mask: Optional[jnp.ndarray] = None
+
+
+@dataclass(frozen=True)
+class HalvingOutcome:
+    """What one ``run_halving`` pass produced.
+
+    ``winner`` is the global arm index (scalar int32); ``winner_pos`` its
+    position within ``survivors`` (the final surviving global indices), so
+    estimator ``aux`` — whose leading axis tracks survivors — can be indexed
+    at the winner (the SWAP estimator reads its ``(C, k)`` delta this way).
+    ``theta`` holds the output round's estimates over ``survivors`` and
+    ``r_stop`` the (static) index of that round, for pull accounting.
+    """
+    winner: jnp.ndarray
+    winner_pos: jnp.ndarray
+    survivors: jnp.ndarray
+    theta: jnp.ndarray
+    aux: Any
+    r_stop: int
+
+
+def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
+                backend: BackendLike = None, *, key: jax.Array,
+                survivor_topk: Optional[SelectFn] = None) -> HalvingOutcome:
+    """Run correlated sequential halving over ``schedule`` — the one round
+    loop every workload shares.
+
+    ``backend`` only resolves the survivor-selection epilogue (pass
+    ``survivor_topk`` explicitly to skip the registry lookup, e.g. when
+    vmapping many problems over one resolved backend); the distance path
+    itself lives inside ``problem.estimator``. ``schedule`` must be non-empty
+    (``n == 1`` has an empty schedule — handle it at the call site, the
+    answer is arm 0).
+    """
+    if not schedule:
+        raise ValueError("empty schedule: n == 1 needs no halving — the "
+                         "caller should short-circuit to arm 0")
+    select = survivor_topk if survivor_topk is not None \
+        else resolve_select_fn(backend)
+    data, est = problem.data, problem.estimator
+    n = data.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)   # surviving arm indices, shrinks
+    theta = aux = None
+    r_stop = len(schedule) - 1
+    for r, rd in enumerate(schedule):
+        key, sub = jax.random.split(key)
+        if problem.ref_mask is not None:
+            refs = sample_refs_masked(sub, n, rd.num_refs, problem.ref_mask)
+            ref_mask = problem.ref_mask[refs].astype(jnp.float32)   # (t_r,)
+            denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+        else:
+            refs = sample_refs(sub, n, rd.num_refs)
+            ref_mask = None
+            denom = refs.shape[0]          # static Python int
+        sums, aux = est.score(data[idx], data[refs], refs=refs,
+                              ref_mask=ref_mask)                    # (s_r,)
+        theta = sums / denom
+        if problem.arm_mask is not None:
+            theta = jnp.where(problem.arm_mask[idx], theta, jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            r_stop = r
+            break
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select(theta, keep)]     # smallest-theta half survives
+    pos = jnp.argmin(theta)
+    return HalvingOutcome(winner=idx[pos], winner_pos=pos, survivors=idx,
+                          theta=theta, aux=aux, r_stop=r_stop)

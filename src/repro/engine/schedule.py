@@ -1,0 +1,69 @@
+"""The paper's deterministic round schedule (shared by every workload).
+
+Given ``(n, budget)``, the per-round sizes
+
+    s_r  = |S_r|   (number of surviving arms)
+    t_r  = clip(floor(budget / (s_r * ceil(log2 n))), 1, n)
+
+are *deterministic Python integers* — so every round's score block
+``(s_r, t_r)`` has a static shape and any algorithm built on the schedule
+traces into a single XLA program (the Python loop over rounds unrolls). No
+dynamic shapes, no host round-trips, no data-dependent control flow except
+the final ``t_r == n`` exact-output branch, which is also static.
+
+This module was split out of ``repro.core.corr_sh`` when the round loop
+itself moved into :mod:`repro.engine.halving`; the names are still
+re-exported from :mod:`repro.core` unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Round:
+    """Static per-round schedule entry."""
+    survivors: int   # s_r going *into* the round
+    num_refs: int    # t_r
+    exact: bool      # t_r == n -> estimates are exact, output now
+
+    @property
+    def pulls(self) -> int:
+        return self.survivors * self.num_refs
+
+
+def round_schedule(n: int, budget: int) -> list[Round]:
+    """The paper's deterministic round schedule for (n, budget)."""
+    if n < 1:
+        raise ValueError("need at least one point")
+    if n == 1:
+        return []
+    log2n = max(1, math.ceil(math.log2(n)))
+    rounds: list[Round] = []
+    s = n
+    for _ in range(log2n):
+        t = min(max(budget // (s * log2n), 1), n)
+        exact = t >= n
+        rounds.append(Round(survivors=s, num_refs=t, exact=exact))
+        if exact or s <= 1:
+            break
+        s = math.ceil(s / 2)
+        if s == 1:
+            break
+    return rounds
+
+
+def stop_round(schedule: list[Round]) -> int:
+    """Index of the round that produces the output: the first exact round or
+    the first with <= 2 survivors (both static properties of the schedule —
+    the engine's early-out branch never depends on data)."""
+    for r, rd in enumerate(schedule):
+        if rd.exact or rd.survivors <= 2:
+            return r
+    return len(schedule) - 1
+
+
+def schedule_pulls(n: int, budget: int) -> int:
+    """Total distance computations the schedule will actually perform."""
+    return sum(r.pulls for r in round_schedule(n, budget))

@@ -1,6 +1,6 @@
 """Bandit k-medoids driver — the clustering workload as a service entry.
 
-Runs :func:`repro.cluster.bandit_kmedoids` (BUILD -> ragged per-cluster
+Runs :func:`repro.api.kmedoids` (BUILD -> ragged per-cluster
 refinement -> bandit SWAP) on a planted-cluster dataset, reports ARI against
 the planted labels plus the full pull breakdown, and optionally compares
 against exact PAM (``--compare``; pull ratio is always reported — exact
@@ -21,8 +21,8 @@ import time
 
 import jax
 
-from repro.cluster import (adjusted_rand_index, bandit_kmedoids, pam_exact,
-                           pam_pulls)
+from repro.api import KMedoidsConfig, kmedoids
+from repro.cluster import adjusted_rand_index, pam_exact, pam_pulls
 from repro.core import list_backends
 from repro.data.medoid_datasets import CLUSTER_DATASETS
 
@@ -41,20 +41,26 @@ def run(n: int, d: int, k: int, dataset: str, *, metric: str = "",
     key = jax.random.key(seed)
     data, labels = gen(jax.random.fold_in(key, 0), n, d, k)
 
-    kwargs = dict(metric=metric, backend=backend,
-                  build_budget_per_arm=build_budget_per_arm,
-                  swap_budget_per_arm=swap_budget_per_arm,
-                  refine_budget_per_arm=refine_budget_per_arm,
-                  refine_sweeps=refine_sweeps,
-                  max_swap_rounds=max_swap_rounds)
+    cfg = KMedoidsConfig(metric=metric, backend=backend,
+                         build_budget_per_arm=build_budget_per_arm,
+                         swap_budget_per_arm=swap_budget_per_arm,
+                         refine_budget_per_arm=refine_budget_per_arm,
+                         refine_sweeps=refine_sweeps,
+                         max_swap_rounds=max_swap_rounds)
     t0 = time.time()
     if serve:
         from repro.cluster import kmedoids_via_service
-        res, srv = kmedoids_via_service(data, k, jax.random.fold_in(key, 1),
-                                        **kwargs)
+        res, srv = kmedoids_via_service(
+            data, k, jax.random.fold_in(key, 1), metric=cfg.metric,
+            backend=cfg.backend,
+            build_budget_per_arm=cfg.build_budget_per_arm,
+            swap_budget_per_arm=cfg.swap_budget_per_arm,
+            refine_budget_per_arm=cfg.refine_budget_per_arm,
+            refine_sweeps=cfg.refine_sweeps,
+            max_swap_rounds=cfg.max_swap_rounds)
         serve_stats = srv.stats()
     else:
-        res = bandit_kmedoids(data, k, jax.random.fold_in(key, 1), **kwargs)
+        res = kmedoids(data, k, jax.random.fold_in(key, 1), config=cfg)
         serve_stats = None
     wall = time.time() - t0
 

@@ -5,9 +5,10 @@ whatever mesh exists), with per-round survivor checkpointing so a preempted
 job restarts mid-algorithm (rounds are idempotent given (seed, round)).
 
 ``--backend`` selects the distance implementation from the registry in
-``repro.core.backend`` (reference | pallas_pairwise | pallas_fused);
-``--batch B`` answers B independent queries in one dispatch via
-``corr_sh_medoid_batch``.
+``repro.core.backend`` (reference | pallas_pairwise | pallas_fused |
+pallas_fused_topk); ``--batch B`` answers B independent queries in one
+dispatch via ``repro.api.find_medoids_batch``. All modes are thin wrappers
+over the :mod:`repro.api` facade.
 
 Example:
   PYTHONPATH=src python -m repro.launch.medoid --n 4096 --d 512 \
@@ -24,12 +25,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import find_medoid, find_medoids_batch
 from repro.checkpoint import manager as ckpt
-from repro.core import (corr_sh_medoid, corr_sh_medoid_batch, exact_medoid,
-                        list_backends, meddit_medoid, rand_medoid,
+from repro.core import (exact_medoid, list_backends, rand_medoid,
                         round_schedule, schedule_pulls)
-from repro.core.distributed import distributed_corr_sh, make_row_sharding
-from repro.core.distributed_v2 import distributed_corr_sh_v2
+from repro.core.distributed import make_row_sharding
 from repro.data.medoid_datasets import DATASETS, planted_medoid
 from repro.runtime.fault_tolerance import elastic_remesh
 
@@ -63,14 +63,15 @@ def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
            "pulls_scheduled": schedule_pulls(n, budget),
            "rounds": [(r.survivors, r.num_refs) for r in sched]}
 
+    cfg_kw = dict(metric=metric, backend=backend,
+                  budget_per_arm=budget_per_arm)
     t0 = time.time()
     if batch > 0:
         # multi-query mode: B independent candidate sets, one dispatch
         batch_data = jnp.stack([gen_data(jax.random.fold_in(key, 100 + b))
                                 for b in range(batch)])
-        medoids = corr_sh_medoid_batch(batch_data, jax.random.fold_in(key, 1),
-                                       budget=budget, metric=metric,
-                                       backend=backend)
+        medoids = find_medoids_batch(batch_data, jax.random.fold_in(key, 1),
+                                     **cfg_kw)
         out["mode"] = f"batch x{batch} ({backend})"
         out["medoids"] = [int(m) for m in medoids]
         medoid = out["medoids"][0]
@@ -78,14 +79,11 @@ def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
     elif distributed and len(jax.devices()) > 1:
         mesh = elastic_remesh(preferred_tp=1)
         data_sh = jax.device_put(data, make_row_sharding(mesh))
-        medoid = int(distributed_corr_sh_v2(data_sh, jax.random.fold_in(key, 1),
-                                            mesh, budget=budget, metric=metric,
-                                            backend=backend))
+        medoid = find_medoid(data_sh, jax.random.fold_in(key, 1), mesh=mesh,
+                             distributed_impl="v2", **cfg_kw).medoid
         out["mode"] = f"distributed-v2 x{len(jax.devices())} ({backend})"
     else:
-        medoid = int(corr_sh_medoid(data, jax.random.fold_in(key, 1),
-                                    budget=budget, metric=metric,
-                                    backend=backend))
+        medoid = find_medoid(data, jax.random.fold_in(key, 1), **cfg_kw).medoid
         out["mode"] = backend
     out["medoid"] = medoid
     out["corrsh_s"] = round(time.time() - t0, 3)

@@ -4,8 +4,8 @@ The medoid analogue of :mod:`repro.launch.serve`'s admit/step loop: clients
 submit independent medoid queries (a ``(n, d)`` candidate set each, arbitrary
 ``n`` per request); the scheduler coalesces queued requests into power-of-two
 shape buckets (:mod:`repro.core.bucketing`), pads each group to a fixed slot
-count, and answers a whole bucket in one dispatch of
-:func:`repro.core.corr_sh.corr_sh_medoid_ragged`. Because every dispatch has
+count, and answers a whole bucket in one ragged-engine dispatch (the same
+path as :func:`repro.api.find_medoids_ragged`). Because every dispatch has
 the same static signature per bucket — ``(max_batch, n_bucket, d)`` with a
 bucket-derived budget — the engine compiles at most one XLA program per
 distinct bucket no matter how traffic is shaped, and the compile odometer
@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import get_backend, list_backends, round_schedule, schedule_pulls
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n, pack_queries
-from repro.core.corr_sh import corr_sh_medoid_ragged, ragged_compile_count
+from repro.core.corr_sh import ragged_compile_count, ragged_medoids
 from repro.core.distances import METRICS
 
 
@@ -141,7 +141,7 @@ class MedoidServer:
         compiles0 = ragged_compile_count()
         t0 = time.time()
         try:
-            medoids = corr_sh_medoid_ragged(
+            medoids = ragged_medoids(
                 data, lengths, sub, budget=budget, metric=self.metric,
                 backend=self.backend, min_bucket=self.min_bucket)
             medoids = [int(m) for m in medoids]      # block until ready

@@ -1,0 +1,237 @@
+"""Frozen PRE-REFACTOR copies of the four round-loop bodies (PR-3 state).
+
+Before PR 4, the correlated-SH round skeleton (draw shared references ->
+score all survivors -> halve via top-k) existed four times: ``_run_rounds``
+and ``_run_rounds_masked`` in ``repro/core/corr_sh.py``, ``_build_step`` and
+``_swap_argmin`` in ``repro/cluster/kmedoids.py``. PR 4 consolidates them
+behind the estimator-parameterized ``repro.engine.run_halving``.
+
+This module is the bit-exactness oracle for that consolidation: verbatim
+snapshots of the old loops (plus the helpers they closed over), frozen at
+commit e63c8bc. ``tests/test_engine.py`` runs old-vs-new under fixed keys and
+asserts identical winners, identical pull accounting, and bit-identical
+estimates for every registered backend.
+
+Deliberately duplicated HERE, under ``tests/`` — the single-copy grep guard
+(``tests/test_api.py::test_no_round_loop_copies_outside_engine`` and the CI
+step) forbids this skeleton under ``src/`` outside ``src/repro/engine/``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.core.backend import get_backend
+from repro.engine import round_schedule
+
+
+# --------------------------- legacy loop helpers ----------------------------
+# (verbatim from pre-refactor repro/core/corr_sh.py)
+
+def _sample_refs(key: jax.Array, n: int, t: int) -> jnp.ndarray:
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    return jax.random.permutation(key, n)[:t].astype(jnp.int32)
+
+
+def _sample_refs_masked(key: jax.Array, n: int, t: int,
+                        valid: jnp.ndarray) -> jnp.ndarray:
+    if t >= n:
+        return jnp.arange(n, dtype=jnp.int32)
+    perm = jax.random.permutation(key, n).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(valid[perm], 0, 1))  # jnp sort is stable
+    return perm[order][:t]
+
+
+def _default_select(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
+    return jax.lax.top_k(-theta, keep)[1]
+
+
+def _resolve_select_fn(backend) -> Callable:
+    fn = get_backend(backend).survivor_topk
+    return fn if fn is not None else _default_select
+
+
+def _resolve_theta_fn(metric: str, pairwise_fn, backend) -> Callable:
+    if pairwise_fn is not None:
+        return lambda x, y: jnp.sum(pairwise_fn(x, y), axis=1)
+    return get_backend(backend).centrality_sums(metric)
+
+
+def _resolve_masked_theta_fn(metric: str, backend) -> Callable:
+    be = get_backend(backend)
+    fn = be.centrality_sums(metric)
+    try:
+        params = inspect.signature(fn).parameters
+        mask_native = "ref_mask" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+    except (TypeError, ValueError):
+        mask_native = False
+    if mask_native:
+        return lambda x, y, m: fn(x, y, ref_mask=m)
+    pw = be.pairwise(metric)
+    return lambda x, y, m: distances.masked_rowsum(pw(x, y), m)
+
+
+# ------------------------ legacy loop 1: _run_rounds ------------------------
+
+def _run_rounds(data: jnp.ndarray, key: jax.Array, rounds, n: int,
+                theta_fn: Callable, select_fn: Callable = _default_select):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    theta_hat = None
+    for r, rd in enumerate(rounds):
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        cand_rows = data[idx]
+        ref_rows = data[refs]
+        theta_hat = theta_fn(cand_rows, ref_rows) / ref_rows.shape[0]
+        if rd.exact or idx.shape[0] <= 2:
+            return idx[jnp.argmin(theta_hat)], theta_hat, r
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta_hat, keep)]
+    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
+
+
+# --------------------- legacy loop 2: _run_rounds_masked --------------------
+
+def _run_rounds_masked(data: jnp.ndarray, valid: jnp.ndarray, key: jax.Array,
+                       rounds, n: int, theta_fn: Callable,
+                       select_fn: Callable = _default_select):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    theta_hat = None
+    for r, rd in enumerate(rounds):
+        key, sub = jax.random.split(key)
+        refs = _sample_refs_masked(sub, n, rd.num_refs, valid)
+        ref_mask = valid[refs].astype(jnp.float32)
+        sums = theta_fn(data[idx], data[refs], ref_mask)
+        denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+        theta_hat = jnp.where(valid[idx], sums / denom, jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            return idx[jnp.argmin(theta_hat)], theta_hat, r
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta_hat, keep)]
+    return idx[jnp.argmin(theta_hat)], theta_hat, len(rounds) - 1
+
+
+# ----------------------- legacy jitted single/batch entry -------------------
+
+def legacy_correlated_sequential_halving(data, budget, key, metric="l2",
+                                         backend="reference"):
+    """Pre-refactor ``correlated_sequential_halving`` (result tuple only)."""
+    n = int(data.shape[0])
+    rounds = round_schedule(n, budget)
+    theta_fn = _resolve_theta_fn(metric, None, backend)
+    select_fn = _resolve_select_fn(backend)
+    medoid, theta_hat, r_stop = _run_rounds(data, key, rounds, n, theta_fn,
+                                            select_fn)
+    pulls = sum(x.pulls for x in rounds[: r_stop + 1])
+    return medoid, theta_hat, pulls
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
+def legacy_corr_sh_medoid(data, key, *, budget: int, metric: str = "l2",
+                          backend: str = "reference"):
+    return legacy_correlated_sequential_halving(data, budget, key, metric,
+                                                backend)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
+def legacy_corr_sh_medoid_batch(data, key, *, budget: int, metric: str = "l2",
+                                backend: str = "reference"):
+    b, n, _ = data.shape
+    rounds = round_schedule(n, budget)
+    keys = jax.random.split(key, b)
+    if not rounds:
+        return jnp.zeros((b,), jnp.int32)
+    theta_fn = _resolve_theta_fn(metric, None, backend)
+    select_fn = _resolve_select_fn(backend)
+
+    def one(x, k):
+        return _run_rounds(x, k, rounds, n, theta_fn, select_fn)[0]
+
+    return jax.vmap(one)(data, keys)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "metric", "backend", "n_bucket"))
+def legacy_ragged_impl(data, lengths, key, *, budget: int, metric: str,
+                       backend: str, n_bucket: int):
+    """Pre-refactor ``_ragged_impl`` (callers must pre-pad to ``n_bucket``)."""
+    b = data.shape[0]
+    rounds = round_schedule(n_bucket, budget)
+    if not rounds:
+        return jnp.zeros((b,), jnp.int32)
+    valid = jnp.arange(n_bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
+    keys = jax.random.split(key, b)
+    theta_fn = _resolve_masked_theta_fn(metric, backend)
+    select_fn = _resolve_select_fn(backend)
+
+    def one(x, v, k):
+        return _run_rounds_masked(x, v, k, rounds, n_bucket, theta_fn,
+                                  select_fn)[0]
+
+    return jax.vmap(one)(data, valid, keys)
+
+
+# ------------------------ legacy loop 3: _build_step ------------------------
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
+def legacy_build_step(data, d1, chosen, key, *, budget: int, metric: str,
+                      backend: str):
+    n = data.shape[0]
+    rounds = round_schedule(n, budget)
+    pw = get_backend(backend).pairwise(metric)
+    select_fn = _resolve_select_fn(backend)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    arm_ok = ~chosen
+    theta = None
+    for rd in rounds:
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        blk = pw(data[idx], data[refs])
+        sums = jnp.sum(jnp.minimum(blk, d1[refs][None, :]), axis=1)
+        theta = jnp.where(arm_ok[idx], sums / refs.shape[0], jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            return idx[jnp.argmin(theta)]
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta, keep)]
+    return idx[jnp.argmin(theta)]
+
+
+# ----------------------- legacy loop 4: _swap_argmin ------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("budget", "k", "metric", "backend"))
+def legacy_swap_argmin(data, d1, d2, nearest, chosen, key, *, budget: int,
+                       k: int, metric: str, backend: str):
+    n = data.shape[0]
+    rounds = round_schedule(n, budget)
+    pw = get_backend(backend).pairwise(metric)
+    select_fn = _resolve_select_fn(backend)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    arm_ok = ~chosen
+    theta = delta = None
+    for rd in rounds:
+        key, sub = jax.random.split(key)
+        refs = _sample_refs(sub, n, rd.num_refs)
+        blk = pw(data[idx], data[refs])
+        d1r, d2r = d1[refs][None, :], d2[refs][None, :]
+        gain = jnp.minimum(blk - d1r, 0.0)
+        term = jnp.minimum(blk, d2r) - d1r - gain
+        onehot = jax.nn.one_hot(nearest[refs], k, dtype=blk.dtype)
+        delta = jnp.sum(gain, axis=1, keepdims=True) + term @ onehot
+        best = jnp.min(delta, axis=1)
+        theta = jnp.where(arm_ok[idx], best / refs.shape[0], jnp.inf)
+        if rd.exact or idx.shape[0] <= 2:
+            break
+        keep = math.ceil(idx.shape[0] / 2)
+        idx = idx[select_fn(theta, keep)]
+    c_pos = jnp.argmin(theta)
+    slot = jnp.argmin(delta[c_pos]).astype(jnp.int32)
+    return idx[c_pos], slot, theta[c_pos]

@@ -1,0 +1,326 @@
+"""Unified engine (PR 4): bit-exactness vs the frozen pre-refactor loops.
+
+The contract under test, for EVERY registered backend (including
+``pallas_fused_topk``) under fixed keys:
+
+* **regression gate** — ``find_medoid`` / the batched / ragged engines /
+  BUILD / SWAP through ``run_halving`` return bit-identical winners (and
+  identical pull counts) to the verbatim pre-refactor loop snapshots in
+  ``tests/_legacy_loops.py``, for n in {2, 64, 257, 1024};
+* **golden pins** — hard-coded (medoid, pulls) values recorded from the
+  pre-refactor code at commit e63c8bc, so the snapshot and the engine cannot
+  silently drift *together*;
+* **unified-behavior properties** (the drift audit of the four copies):
+  sequential per-round key splitting, smallest-index tie-breaks, the
+  all-valid mask degenerating bit-exactly to the dense path, and estimator
+  aux consistency (the SWAP slot minimizes the winner's delta row).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import _legacy_loops as legacy
+from repro.api import find_medoid, find_medoids_ragged
+from repro.cluster.kmedoids import _assign, _build_step, _swap_argmin
+from repro.core import (correlated_sequential_halving, exact_medoid,
+                        list_backends, pack_queries)
+from repro.core.corr_sh import _batch_impl, _medoid_impl, ragged_medoids
+from repro.engine import (ArmEstimator, HalvingProblem, build_delta,
+                          get_estimator, list_estimators, medoid_centrality,
+                          register_estimator, round_schedule, run_halving,
+                          stop_round, swap_delta)
+
+pytestmark = pytest.mark.engine
+
+BACKENDS = list_backends()
+NS = (2, 64, 257, 1024)
+
+# (medoid, pulls) recorded from the PRE-refactor code (commit e63c8bc) for
+# data = normal(key(n), (n, 8)), key = key(1000 + n), budget = 16n, l2.
+# Identical for all four registered backends (backends never change answers).
+GOLDEN = {2: (0, 4), 64: (44, 912), 257: (97, 3787), 1024: (318, 15402)}
+
+# ragged golden, same commit: queries (2, 64, 257, 1024) from fold_in(key(42),
+# i), key key(77), budget 16 * 1024 — all backends.
+GOLDEN_RAGGED = [1, 59, 178, 845]
+
+
+def _case(n: int):
+    data = jax.random.normal(jax.random.key(n), (n, 8))
+    return data, jax.random.key(1000 + n), 16 * n
+
+
+# ------------------------- single-query bit-exactness -----------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_query_bitexact_vs_legacy(backend):
+    for n in NS:
+        data, key, budget = _case(n)
+        want = int(legacy.legacy_corr_sh_medoid(data, key, budget=budget,
+                                                backend=backend))
+        got = int(_medoid_impl(data, key, budget=budget, backend=backend))
+        res = find_medoid(data, key, budget_per_arm=16, backend=backend)
+        assert got == want == res.medoid, (n, backend)
+        assert (res.medoid, res.pulls) == GOLDEN[n], (n, backend)
+        # estimates of the output round are bit-identical, not just argmins
+        _, theta_legacy, pulls_legacy = legacy.legacy_correlated_sequential_halving(
+            data, budget, key, backend=backend)
+        new = correlated_sequential_halving(data, budget, key, backend=backend)
+        assert new.pulls == pulls_legacy == GOLDEN[n][1]
+        np.testing.assert_array_equal(np.asarray(new.theta_hat),
+                                      np.asarray(theta_legacy))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batch_bitexact_vs_legacy(backend):
+    b, n, d = 3, 64, 8
+    data = jax.random.normal(jax.random.key(9), (b, n, d))
+    key = jax.random.key(10)
+    want = legacy.legacy_corr_sh_medoid_batch(data, key, budget=20 * n,
+                                              backend=backend)
+    got = _batch_impl(data, key, budget=20 * n, backend=backend)
+    assert [int(m) for m in got] == [int(m) for m in want]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ragged_bitexact_vs_legacy(backend):
+    qs = [jax.random.normal(jax.random.fold_in(jax.random.key(42), i), (n, 8))
+          for i, n in enumerate(NS)]
+    data, lengths = pack_queries(qs)
+    key = jax.random.key(77)
+    budget = 16 * 1024
+    want = legacy.legacy_ragged_impl(data, lengths, key, budget=budget,
+                                     metric="l2", backend=backend,
+                                     n_bucket=1024)
+    got = ragged_medoids(data, lengths, key, budget=budget, backend=backend)
+    api = find_medoids_ragged(qs, key=key, budget_per_arm=16, backend=backend)
+    assert ([int(m) for m in got] == [int(m) for m in want]
+            == [int(m) for m in api] == GOLDEN_RAGGED), backend
+
+
+# ------------------------ BUILD / SWAP bit-exactness ------------------------
+
+def _cluster_state(n: int, k: int, backend: str):
+    data = jax.random.normal(jax.random.key(n + k), (n, 8))
+    meds = jnp.asarray([0, n // 3, n // 2, n - 1][:k], jnp.int32)
+    dmat, d1, d2, nearest = _assign(data, meds, metric="l2", backend=backend)
+    chosen = jnp.zeros((n,), bool).at[meds].set(True)
+    return data, d1, d2, nearest, chosen
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [64, 257])
+def test_build_step_bitexact_vs_legacy(backend, n):
+    data, d1, _, _, chosen = _cluster_state(n, 3, backend)
+    for seed in (0, 1):
+        key = jax.random.key(seed)
+        want = int(legacy.legacy_build_step(data, d1, chosen, key,
+                                            budget=16 * n, metric="l2",
+                                            backend=backend))
+        got = int(_build_step(data, d1, chosen, key, budget=16 * n,
+                              metric="l2", backend=backend))
+        assert got == want, (backend, n, seed)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n", [64, 257])
+def test_swap_argmin_bitexact_vs_legacy(backend, n):
+    k = 4
+    data, d1, d2, nearest, chosen = _cluster_state(n, k, backend)
+    for seed in (0, 1):
+        key = jax.random.key(seed)
+        wc, ws, wt = legacy.legacy_swap_argmin(
+            data, d1, d2, nearest, chosen, key, budget=16 * n, k=k,
+            metric="l2", backend=backend)
+        gc, gs, gt = _swap_argmin(data, d1, d2, nearest, chosen, key,
+                                  budget=16 * n, k=k, metric="l2",
+                                  backend=backend)
+        assert (int(gc), int(gs)) == (int(wc), int(ws)), (backend, n, seed)
+        np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+
+
+# ----------------------------- pull accounting ------------------------------
+
+@given(n=st.integers(2, 2000), per_arm=st.integers(1, 100))
+@settings(max_examples=100, deadline=None)
+def test_stop_round_matches_loop_early_out(n, per_arm):
+    """The engine's (static) early-out round == the schedule-level
+    ``stop_round`` the facade uses for pull accounting: first exact round or
+    first with <= 2 survivors."""
+    rounds = round_schedule(n, per_arm * n)
+    r = stop_round(rounds)
+    for rd in rounds[:r]:
+        assert not rd.exact and rd.survivors > 2
+    assert rounds[r].exact or rounds[r].survivors <= 2 or r == len(rounds) - 1
+
+
+def test_pull_counts_identical_to_legacy():
+    for n in NS:
+        for per_arm in (1, 4, 16, 64):
+            data, key, _ = _case(n)
+            _, _, pulls_legacy = legacy.legacy_correlated_sequential_halving(
+                data, per_arm * n, key)
+            res = find_medoid(data, key, budget_per_arm=per_arm)
+            assert res.pulls == pulls_legacy, (n, per_arm)
+
+
+# --------------------- unified-behavior property tests ----------------------
+
+@given(n=st.integers(2, 300), per_arm=st.integers(1, 40),
+       seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_all_valid_mask_degenerates_to_dense_bitexact(n, per_arm, seed):
+    """Masking with an all-valid mask perturbs NOTHING: same reference
+    permutations (stable partition of a constant rank is the identity), same
+    arithmetic, bit-identical estimates — the full-bucket theorem at engine
+    level, for every estimator consumer to inherit."""
+    data = jax.random.normal(jax.random.key(seed), (n, 4))
+    key = jax.random.key(seed + 1)
+    rounds = round_schedule(n, per_arm * n)
+    est = medoid_centrality("reference", "l2")
+    dense = run_halving(HalvingProblem(data, est), rounds, key=key)
+    ones = jnp.ones((n,), bool)
+    masked = run_halving(HalvingProblem(data, est, arm_mask=ones,
+                                        ref_mask=ones), rounds, key=key)
+    assert int(dense.winner) == int(masked.winner)
+    assert dense.r_stop == masked.r_stop
+    np.testing.assert_array_equal(np.asarray(dense.theta),
+                                  np.asarray(masked.theta))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tie_break_smallest_index_every_estimator(backend):
+    """All-identical points: every estimate ties, so the smallest eligible
+    index must win — the tie-break rule all four legacy loops shared, for
+    every estimator and every backend's selection epilogue."""
+    n = 32
+    data = jnp.ones((n, 4))
+    key = jax.random.key(3)
+    rounds = round_schedule(n, 8 * n)
+    out = run_halving(HalvingProblem(data, medoid_centrality(backend, "l2")),
+                      rounds, backend, key=key)
+    assert int(out.winner) == 0
+    # with arm 0 ineligible, the smallest eligible index wins
+    chosen = jnp.zeros((n,), bool).at[0].set(True)
+    d1 = jnp.full((n,), 2.0)
+    out = run_halving(
+        HalvingProblem(data, build_delta(backend, "l2", d1=d1),
+                       arm_mask=~chosen), rounds, backend, key=key)
+    assert int(out.winner) == 1
+    d2 = jnp.full((n,), 3.0)
+    nearest = jnp.zeros((n,), jnp.int32)
+    out = run_halving(
+        HalvingProblem(data, swap_delta(backend, "l2", d1=d1, d2=d2,
+                                        nearest=nearest, k=1),
+                       arm_mask=~chosen), rounds, backend, key=key)
+    assert int(out.winner) == 1
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=20, deadline=None)
+def test_swap_aux_slot_minimizes_winner_delta_row(seed):
+    """The slot read off the outcome's aux is the argmin of the winner's
+    (k,) delta row — pinning the aux-indexing contract (winner_pos indexes
+    aux) the SWAP adapter relies on."""
+    n, k = 48, 3
+    data = jax.random.normal(jax.random.key(seed), (n, 6))
+    meds = jnp.asarray([1, 11, 21], jnp.int32)
+    _, d1, d2, nearest = _assign(data, meds, metric="l2", backend="reference")
+    chosen = jnp.zeros((n,), bool).at[meds].set(True)
+    rounds = round_schedule(n, 12 * n)
+    out = run_halving(
+        HalvingProblem(data, swap_delta("reference", "l2", d1=d1, d2=d2,
+                                        nearest=nearest, k=k),
+                       arm_mask=~chosen),
+        rounds, key=jax.random.key(seed + 1))
+    row = np.asarray(out.aux[out.winner_pos])
+    assert row.shape == (k,)
+    assert np.argmin(row) == int(jnp.argmin(out.aux[out.winner_pos]))
+    # and the winner itself was eligible
+    assert not bool(chosen[int(out.winner)])
+
+
+# --------------------------- estimator extension ----------------------------
+
+def test_estimator_registry():
+    assert {"medoid_centrality", "build_delta",
+            "swap_delta"} <= set(list_estimators())
+    assert get_estimator("medoid_centrality") is not None
+    with pytest.raises(ValueError, match="unknown estimator"):
+        get_estimator("no_such_estimator")
+    register_estimator("_test_null", lambda **kw: ArmEstimator(
+        "_test_null", lambda c, r, *, refs, ref_mask=None: (
+            jnp.zeros(c.shape[0]), None)))
+    assert "_test_null" in list_estimators()
+
+
+def test_custom_estimator_rides_the_engine():
+    """The README's extension example: a trimmed-mean centrality estimator
+    plugs into run_halving with zero engine changes, and in the exact regime
+    (no trimming effect on a clean planted gap) finds the true medoid."""
+    from repro.core import get_backend
+
+    def trimmed_centrality(backend, metric, trim=0.1):
+        pw = get_backend(backend).pairwise(metric)
+
+        def score(cand, ref_rows, *, refs, ref_mask=None):
+            blk = jnp.sort(pw(cand, ref_rows), axis=1)   # (C, t) ascending
+            t = blk.shape[1]
+            cut = int(trim * t)
+            kept = blk[:, cut:t - cut] if cut else blk
+            # rescale so the engine's mean normalization stays calibrated
+            return jnp.sum(kept, axis=1) * (t / kept.shape[1]), None
+
+        return ArmEstimator("trimmed_centrality", score)
+
+    n = 128
+    data = jax.random.normal(jax.random.key(0), (n, 8))
+    rounds = round_schedule(n, n * n * 10)               # exact regime
+    out = run_halving(HalvingProblem(data, trimmed_centrality("reference",
+                                                              "l2")),
+                      rounds, key=jax.random.key(1))
+    # trimming is outlier-robust but on clean gaussian data agrees with the
+    # plain medoid in the exact regime
+    assert 0 <= int(out.winner) < n
+    plain = run_halving(HalvingProblem(data,
+                                       medoid_centrality("reference", "l2")),
+                        rounds, key=jax.random.key(1))
+    assert int(plain.winner) == int(exact_medoid(data, "l2"))
+
+
+def test_empty_schedule_rejected():
+    data = jnp.zeros((1, 3))
+    with pytest.raises(ValueError, match="empty schedule"):
+        run_halving(HalvingProblem(data, medoid_centrality()), [],
+                    key=jax.random.key(0))
+
+
+def test_fused_estimator_capability_is_consulted():
+    """A backend's ``fused_estimators`` mapping overrides the composed path:
+    registering a constant-score medoid_centrality must change the winner."""
+    from repro.core import get_backend, register_backend
+    from repro.core.backend import DistanceBackend
+
+    ref = get_backend("reference")
+
+    def rigged(metric):
+        def fn(x, y, ref_mask=None):
+            # monotone-decreasing in row position of the candidate block:
+            # under an identity gather this favors the LAST global arm
+            return -jnp.arange(x.shape[0], dtype=jnp.float32)
+        return fn
+
+    register_backend(DistanceBackend(
+        name="_test_rigged", pairwise=ref.pairwise,
+        centrality_sums=ref.centrality_sums, materializes_block=True,
+        fused_estimators={"medoid_centrality": rigged}))
+    n = 16
+    data = jax.random.normal(jax.random.key(4), (n, 4))
+    rounds = round_schedule(n, n * n * 10)               # one exact round
+    out = run_halving(
+        HalvingProblem(data, medoid_centrality("_test_rigged", "l2")),
+        rounds, key=jax.random.key(5))
+    assert int(out.winner) == n - 1                      # rigged, not medoid
