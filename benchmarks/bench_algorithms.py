@@ -48,6 +48,7 @@ def run(n: int = 2048, d: int = 512, trials: int = 20,
         res = meddit_medoid(data, jax.random.key(0), metric=metric,
                             sigma=float(hs.sigma), batch=64,
                             max_pulls=200 * n)
+        jax.block_until_ready((res.medoid, res.pulls))   # timer sees device work
         t_med = time.time() - t0
         rows.append({"dataset": name, "metric": metric, "algo": "meddit",
                      "pulls_per_arm": float(res.pulls) / n,

@@ -34,6 +34,12 @@ def _normalize(r: dict) -> dict:
     out = {"name": name, "us_per_call": us, "derived": derived}
     if "pulls" in r:
         out["pulls"] = r["pulls"]
+    # first-call (trace+compile) vs steady-state split, where a section
+    # reports it — us_per_call alone conflates one-time compilation with
+    # the recurring serving cost the one-program engine optimizes for
+    for key in ("compile_us", "steady_us", "counters"):
+        if key in r:
+            out[key] = r[key]
     return out
 
 

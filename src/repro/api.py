@@ -220,10 +220,14 @@ def find_medoids_ragged(data, lengths=None,
     if cfg.algo != "corr_sh":
         raise ValueError(f"ragged mode requires algo='corr_sh', "
                          f"got {cfg.algo!r}")
+    donate = False
     if isinstance(data, (list, tuple)):
         if lengths is not None:
             raise ValueError("pass lengths only with pre-packed array data")
         data, lengths = pack_queries(list(data), min_bucket=cfg.min_bucket)
+        # the facade packed this buffer itself and never touches it again —
+        # donate it to the program. User-passed arrays are never donated.
+        donate = True
     elif lengths is None:
         raise ValueError("pre-packed array data needs explicit lengths")
     data = jnp.asarray(data)
@@ -233,7 +237,7 @@ def find_medoids_ragged(data, lengths=None,
     return ragged_medoids(data, lengths, _key_of(key, cfg),
                           budget=cfg.budget_per_arm * n_bucket,
                           metric=cfg.metric, backend=cfg.backend,
-                          min_bucket=cfg.min_bucket)
+                          min_bucket=cfg.min_bucket, donate=donate)
 
 
 # -------------------------------- clustering --------------------------------

@@ -61,6 +61,7 @@ from repro.core.corr_sh import _medoid_impl, ragged_medoids
 from repro.deprecation import warn_once
 from repro.engine import (HalvingProblem, build_delta, run_halving,
                           swap_delta)
+from repro.engine.programs import donation_enabled
 
 # refiner hook: (cluster member arrays, key) -> (local medoid indices, pulls).
 # The default runs bucketed ragged dispatches in-process; the service layer
@@ -102,6 +103,39 @@ def _build_step(data: jnp.ndarray, d1: jnp.ndarray, chosen: jnp.ndarray,
     problem = HalvingProblem(data, build_delta(backend, metric, d1=d1),
                              arm_mask=~chosen)
     return run_halving(problem, rounds, backend, key=key).winner
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "budget", "metric", "backend"))
+def _build_scan(data: jnp.ndarray, m0: jnp.ndarray, key_build: jax.Array, *,
+                k: int, budget: int, metric: str, backend: str):
+    """BUILD steps 1..k-1 as ONE device-resident program: a ``lax.scan``
+    whose carry is the ``(d1, chosen)`` cache pair. Each step runs the same
+    traced round loop as :func:`_build_step` (``fold_in(key_build, t)`` per
+    step, identical to the per-step host loop it replaces), updates the
+    nearest-medoid distance cache ``d1`` from the winner's distance row, and
+    marks the winner chosen — per-step winners never visit the host.
+    Returns ``(meds (k,), d1 (n,))``."""
+    n = data.shape[0]
+    pw = get_backend(backend).pairwise(metric)
+    rounds = round_schedule(n, budget)
+    d1 = jnp.minimum(jnp.full((n,), jnp.inf, jnp.float32),
+                     pw(data[m0][None, :], data)[0])
+    chosen = jnp.zeros((n,), bool).at[m0].set(True)
+
+    def step(carry, t):
+        d1, chosen = carry
+        kt = jax.random.fold_in(key_build, t)
+        problem = HalvingProblem(data, build_delta(backend, metric, d1=d1),
+                                 arm_mask=~chosen)
+        m = run_halving(problem, rounds, backend, key=kt).winner
+        d1 = jnp.minimum(d1, pw(data[m][None, :], data)[0])
+        chosen = chosen.at[m].set(True)
+        return (d1, chosen), m
+
+    (d1, _), ms = jax.lax.scan(step, (d1, chosen),
+                               jnp.arange(1, k, dtype=jnp.int32))
+    return jnp.concatenate([m0[None].astype(jnp.int32), ms]), d1
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "backend"))
@@ -158,6 +192,73 @@ def _exact_swap_delta(data: jnp.ndarray, cand: jnp.ndarray,
     delta = jnp.sum(jnp.where(mine, jnp.minimum(dc, d2) - d1,
                               jnp.minimum(dc - d1, 0.0)))
     return delta, dc
+
+
+def _swap_sweep_impl(data: jnp.ndarray, dmat: jnp.ndarray, meds: jnp.ndarray,
+                     key_swap: jax.Array, *, max_rounds: int, k: int,
+                     budget: int, metric: str, backend: str):
+    """The whole SWAP phase as ONE device-resident program.
+
+    A ``lax.scan`` over ``max_rounds`` candidate sweeps carrying the
+    ``(n, k)`` assignment cache ``dmat`` (donated — the caller's copy is
+    consumed), the medoid slots, and the accept/reject state machine of the
+    host loop it replaces: a round's bandit winner is verified against the
+    exact incumbent-delta vector on device, an accepted swap rewrites one
+    cache column and resets the rejection counter, and two consecutive
+    rejections latch ``done`` (later rounds are masked no-ops; their keys
+    are per-round ``fold_in``\\ s, so skipping costs nothing and perturbs
+    nothing). Winners, deltas, and the acceptance tolerance never visit the
+    host. Returns ``(meds, labels, cost, swaps, executed)`` — ``executed``
+    is the number of non-masked rounds, for exact pull accounting.
+    """
+    n = data.shape[0]
+    pw = get_backend(backend).pairwise(metric)
+    rounds = round_schedule(n, budget)
+
+    def body(carry, rnd):
+        dmat, meds, swaps, rejections, executed, done = carry
+        d1, d2, nearest = _top2_of(dmat)
+        chosen = jnp.zeros((n,), bool).at[meds].set(True)
+        problem = HalvingProblem(
+            data, swap_delta(backend, metric, d1=d1, d2=d2, nearest=nearest,
+                             k=k), arm_mask=~chosen)
+        out = run_halving(problem, rounds, backend,
+                          key=jax.random.fold_in(key_swap, rnd))
+        cand = out.winner
+        slot = jnp.argmin(out.aux[out.winner_pos]).astype(jnp.int32)
+        # exact incumbent verification (one n-vector of distances), with the
+        # same relative tolerance the host loop used
+        dc = pw(data[cand][None, :], data)[0]
+        mine = nearest == slot
+        delta = jnp.sum(jnp.where(mine, jnp.minimum(dc, d2) - d1,
+                                  jnp.minimum(dc - d1, 0.0)))
+        tol = -1e-6 * jnp.maximum(1.0, jnp.sum(d1) / n)
+        accept = (delta < tol) & ~done
+        reject = (delta >= tol) & ~done
+        executed = executed + jnp.where(done, 0, 1)
+        rejections = jnp.where(accept, 0, rejections + reject)
+        done = done | (rejections >= 2)
+        meds = jnp.where(accept, meds.at[slot].set(cand.astype(jnp.int32)),
+                         meds)
+        dmat = jnp.where(accept, dmat.at[:, slot].set(dc), dmat)
+        swaps = swaps + accept
+        return (dmat, meds, swaps, rejections, executed, done), None
+
+    carry = (dmat, meds, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), bool))
+    (dmat, meds, swaps, _, executed, _), _ = jax.lax.scan(
+        body, carry, jnp.arange(max_rounds, dtype=jnp.int32))
+    d1, _, nearest = _top2_of(dmat)
+    return meds, nearest, jnp.sum(d1), swaps, executed
+
+
+# The (n, k) cache is donated into the sweep where donation is real (the
+# caller's copy is dead after the phase); on CPU jax ignores donations with a
+# warning, so the flag is folded away there — same program either way.
+_swap_sweep = jax.jit(
+    _swap_sweep_impl,
+    static_argnames=("max_rounds", "k", "budget", "metric", "backend"),
+    donate_argnums=(1,) if donation_enabled() else ())
 
 
 # --------------------------------------------------------------------------
@@ -232,31 +333,28 @@ def _kmedoids_impl(data, k: int, key: jax.Array, *, metric: str = "l2",
 
     build_budget = build_budget_per_arm * n
     swap_budget = swap_budget_per_arm * n
-    pw = get_backend(backend).pairwise(metric)
 
     # ---------------- BUILD: k correlated-SH argmin steps ----------------
+    # Step 0 IS the paper's problem (same cached program as find_medoid);
+    # steps 1..k-1 run as ONE device-resident scan program — the d1/chosen
+    # caches and every per-step winner stay on device, and the only host
+    # sync of the whole phase is reading the final (k,) medoid vector out
+    # for the (host-side) refinement bookkeeping below.
     key_build = jax.random.fold_in(key, 0)
-    meds: list[int] = []
-    chosen = jnp.zeros((n,), bool)
-    d1 = jnp.full((n,), jnp.inf, jnp.float32)
-    build_pulls = 0
-    for t in range(k):
-        kt = jax.random.fold_in(key_build, t)
-        if t == 0:
-            # the first step IS the paper's problem — same jitted entry point
-            m = int(_medoid_impl(data, kt, budget=build_budget,
-                                 metric=metric, backend=backend))
-        else:
-            m = int(_build_step(data, d1, chosen, kt, budget=build_budget,
-                                metric=metric, backend=backend))
-        build_pulls += schedule_pulls(n, build_budget)
-        meds.append(m)
-        d1 = jnp.minimum(d1, pw(data[m][None, :], data)[0])   # cache update
-        build_pulls += n
-        chosen = chosen.at[m].set(True)
+    m0 = _medoid_impl(data, jax.random.fold_in(key_build, 0),
+                      budget=build_budget, metric=metric, backend=backend)
+    if k > 1:
+        meds_dev, _ = _build_scan(data, m0, key_build, k=k,
+                                  budget=build_budget, metric=metric,
+                                  backend=backend)
+    else:   # k == 1: an empty scan would still trace the step body, whose
+        meds_dev = m0[None].astype(jnp.int32)   # n==1 schedule is empty
 
-    dmat, d1, d2, nearest = _assign(data, jnp.asarray(meds, jnp.int32),
-                                    metric=metric, backend=backend)
+    meds: list[int] = [int(m) for m in meds_dev]     # one post-phase sync
+    build_pulls = k * (schedule_pulls(n, build_budget) + n)
+
+    dmat, d1, d2, nearest = _assign(data, meds_dev, metric=metric,
+                                    backend=backend)
     assign_pulls = n * k
 
     # ------- ragged per-cluster refinement with affected-set caching -------
@@ -291,39 +389,34 @@ def _kmedoids_impl(data, k: int, key: jax.Array, *, metric: str = "l2",
                    | set(labels_np[moved].tolist())) if moved.any() else set()
 
     # ---------------- SWAP: bandit FasterPAM local search ----------------
+    # The whole phase is ONE device-resident program (see _swap_sweep): the
+    # bandit argmin, the exact incumbent verification, the accept/reject
+    # state machine, and the incremental one-column cache updates all run
+    # inside a single lax.scan — a round that doesn't verify re-draws
+    # references under the next round's key (estimator noise, not
+    # convergence) and the sweep latches off after two consecutive
+    # rejections, exactly like the host loop it replaces.
     key_swap = jax.random.fold_in(key, 2)
-    swap_pulls = swaps = rejections = 0
+    swap_pulls = swaps = 0
     # k == n leaves no swap-in candidates (every point is a medoid) — and
     # covers n == 1, whose empty round schedule the argmin couldn't handle
-    swap_rounds = max_swap_rounds if k < n else 0
-    for rnd in range(swap_rounds):
-        chosen = jnp.zeros((n,), bool).at[jnp.asarray(meds)].set(True)
-        cand, slot, _ = _swap_argmin(data, d1, d2, nearest, chosen,
-                                     jax.random.fold_in(key_swap, rnd),
-                                     budget=swap_budget, k=k, metric=metric,
-                                     backend=backend)
-        swap_pulls += schedule_pulls(n, swap_budget)
-        delta, dc = _exact_swap_delta(data, cand, slot, d1, d2, nearest,
-                                      metric=metric, backend=backend)
-        swap_pulls += n
-        tol = -1e-6 * max(1.0, float(jnp.sum(d1)) / n)
-        if float(delta) >= tol:
-            # the winning arm didn't verify — that's estimator noise, not
-            # convergence. Re-draw references (next round key) and only stop
-            # after consecutive failures.
-            rejections += 1
-            if rejections >= 2:
-                break
-            continue
-        rejections = 0
-        meds[int(slot)] = int(cand)
-        dmat = dmat.at[:, int(slot)].set(dc)   # incremental: one column
-        d1, d2, nearest = _top2(dmat)
-        swaps += 1
+    if k < n and max_swap_rounds > 0:
+        meds_dev, nearest, cost_dev, swaps_dev, executed = _swap_sweep(
+            data, dmat, jnp.asarray(meds, jnp.int32), key_swap,
+            max_rounds=max_swap_rounds, k=k, budget=swap_budget,
+            metric=metric, backend=backend)
+        meds = [int(m) for m in meds_dev]          # one post-phase sync
+        swaps = int(swaps_dev)
+        swap_pulls = int(executed) * (schedule_pulls(n, swap_budget) + n)
+        cost = float(cost_dev)
+        labels = np.asarray(nearest)
+    else:
+        cost = float(jnp.sum(d1))
+        labels = np.asarray(nearest)
 
     pulls = build_pulls + assign_pulls + refine_pulls + swap_pulls
     return KMedoidsResult(
-        medoids=meds, labels=np.asarray(nearest), cost=float(jnp.sum(d1)),
+        medoids=meds, labels=labels, cost=cost,
         pulls=pulls, build_pulls=build_pulls, assign_pulls=assign_pulls,
         refine_pulls=refine_pulls, swap_pulls=swap_pulls, swaps=swaps,
         refine_updates=refine_updates, k=k, metric=metric, backend=backend)

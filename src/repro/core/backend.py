@@ -78,6 +78,13 @@ class DistanceBackend:
     # step through it instead of the default XLA top_k — the last off-chip
     # step of a round stays on-chip. ``None`` = default selection.
     survivor_topk: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+    # Optional fused survivor-ordering epilogue: ``fn(theta)`` returns the
+    # full stable ascending ordering of the estimates (``argsort`` with
+    # jax.lax.top_k's exact total-order/stable-tie semantics). This is the
+    # form the scan-based round loop consumes — the per-round keep is a
+    # positional mask over the reordered buffer, so one full ordering serves
+    # every halving ratio. ``None`` = XLA's stable sort.
+    survivor_order: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
     # Optional fused arm-loss estimator paths, keyed by estimator name
     # ("medoid_centrality", "build_delta", "swap_delta", ...). Each value is
     # a ``metric -> score-kernel`` factory; the estimator factories in
@@ -169,6 +176,13 @@ def _topk_epilogue(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
     return kops.kernel_topk_smallest(theta, keep=keep)
 
 
+def _order_epilogue(theta: jnp.ndarray) -> jnp.ndarray:
+    # The full ordering is the keep == C case of the rank/select kernel
+    # pair: padded rows carry int32-max keys, so the first C slots are
+    # exactly the real arms in stable ascending order.
+    return kops.kernel_topk_smallest(theta, keep=theta.shape[0])
+
+
 register_backend(DistanceBackend(
     name="pallas_fused_topk",
     pairwise=kops.pairwise_kernel,
@@ -176,5 +190,6 @@ register_backend(DistanceBackend(
     materializes_block=False,
     description="pallas_fused + on-chip top-k survivor-selection epilogue",
     survivor_topk=_topk_epilogue,
+    survivor_order=_order_epilogue,
     fused_estimators=_FUSED_ESTIMATORS,
 ))

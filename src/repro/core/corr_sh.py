@@ -8,9 +8,13 @@ medoid entry points as thin adapters over it:
 * :func:`correlated_sequential_halving` — the research-level function
   returning the full :class:`CorrSHResult` (medoid, pulls, rounds, final
   estimates);
-* ``_medoid_impl`` / ``_batch_impl`` / :func:`ragged_medoids` — the jitted
-  internal implementations the facade (:mod:`repro.api`), the serving layer,
-  and the clustering refiners dispatch to;
+* ``_medoid_impl`` / ``_batch_impl`` / :func:`ragged_medoids` — the
+  internal entry points the facade (:mod:`repro.api`), the serving layer,
+  and the clustering refiners dispatch to. Since PR 6 these are thin
+  wrappers over the cached jitted programs of
+  :mod:`repro.engine.programs` — keyed by (bucket, schedule config,
+  backend), so repeated same-shape calls never retrace, with optional arm
+  buffer donation for callers that own their packed buffers;
 * :func:`corr_sh_medoid`, :func:`corr_sh_medoid_batch`,
   :func:`corr_sh_medoid_ragged` — the pre-facade public names, kept
   signature-compatible as deprecated shims (one ``DeprecationWarning`` per
@@ -24,7 +28,6 @@ paths — and is now pinned against verbatim pre-refactor loop snapshots by
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
 
@@ -36,8 +39,8 @@ from repro.core.backend import DistanceBackend
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n
 from repro.deprecation import warn_once
 from repro.engine import (HalvingProblem, Round, medoid_centrality,
-                          resolve_select_fn, round_schedule, run_halving,
-                          schedule_pulls)
+                          round_schedule, run_halving, schedule_pulls)
+from repro.engine import instrument, programs
 
 PairwiseFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 BackendLike = Union[str, DistanceBackend, None]
@@ -89,19 +92,20 @@ def correlated_sequential_halving(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
 def _medoid_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
-                 metric: str = "l2",
-                 backend: str = "reference") -> jnp.ndarray:
-    """Jitted single-query medoid (the facade's ``find_medoid`` kernel)."""
-    return correlated_sequential_halving(data, budget, key, metric,
-                                         backend=backend).medoid
+                 metric: str = "l2", backend: str = "reference",
+                 donate: bool = False) -> jnp.ndarray:
+    """Single-query medoid (the facade's ``find_medoid`` kernel): dispatch
+    the cached jitted program for this (budget, metric, backend) config."""
+    instrument.note_dispatch("medoid")
+    fn = programs.medoid_program(budget=budget, metric=metric,
+                                 backend=backend, donate=donate)
+    return fn(data, key)
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "metric", "backend"))
 def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
-                metric: str = "l2",
-                backend: str = "reference") -> jnp.ndarray:
+                metric: str = "l2", backend: str = "reference",
+                donate: bool = False) -> jnp.ndarray:
     """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices.
 
     All queries share one static round schedule (shapes depend only on
@@ -113,68 +117,31 @@ def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
     """
     if data.ndim != 3:
         raise ValueError(f"expected (B, n, d) batch, got shape {data.shape}")
-    b, n, _ = data.shape
-    rounds = round_schedule(n, budget)
-    keys = jax.random.split(key, b)
-    if not rounds:  # n == 1
-        return jnp.zeros((b,), jnp.int32)
-    est = medoid_centrality(backend, metric)
-    select_fn = resolve_select_fn(backend)
-
-    def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        return run_halving(HalvingProblem(x, est), rounds, key=k,
-                           survivor_topk=select_fn).winner
-
-    return jax.vmap(one)(data, keys)
+    instrument.note_dispatch("batch")
+    fn = programs.batch_program(budget=budget, metric=metric,
+                                backend=backend, donate=donate)
+    return fn(data, key)
 
 
 # ---------------------------------------------------------------------------
 # ragged multi-query engine: per-query n via padding + validity masking
 # ---------------------------------------------------------------------------
 
-# Compilation odometer: bumped at *trace* time, i.e. exactly once per XLA
-# program the ragged engine compiles. The bucketing invariants ("a sweep over
-# mixed-n traffic compiles at most one program per bucket") are asserted
-# against this counter by the service tests and bench_ragged.
-_RAGGED_TRACES = 0
-
-
 def ragged_compile_count() -> int:
-    """Number of distinct XLA programs traced by the ragged engine so far."""
-    return _RAGGED_TRACES
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("budget", "metric", "backend", "n_bucket"))
-def _ragged_impl(data: jnp.ndarray, lengths: jnp.ndarray, key: jax.Array, *,
-                 budget: int, metric: str, backend: str,
-                 n_bucket: int) -> jnp.ndarray:
-    global _RAGGED_TRACES
-    _RAGGED_TRACES += 1                      # runs once per compilation
-    b = data.shape[0]
-    rounds = round_schedule(n_bucket, budget)
-    if not rounds:                           # n_bucket == 1
-        return jnp.zeros((b,), jnp.int32)
-    valid = jnp.arange(n_bucket, dtype=jnp.int32)[None, :] < lengths[:, None]
-    keys = jax.random.split(key, b)
-    est = medoid_centrality(backend, metric)
-    select_fn = resolve_select_fn(backend)
-
-    def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-        # padded arms: ineligible to win (arm_mask) AND dropped from every
-        # reference draw / denominator (ref_mask) — one validity mask plays
-        # both roles, exactly as the old masked loop did.
-        problem = HalvingProblem(x, est, arm_mask=v, ref_mask=v)
-        return run_halving(problem, rounds, key=k,
-                           survivor_topk=select_fn).winner
-
-    return jax.vmap(one)(data, valid, keys)
+    """Number of distinct XLA programs traced by the ragged engine so far
+    (the ``"ragged"`` odometer of :mod:`repro.engine.instrument` — bumped at
+    *trace* time, exactly once per compiled program). The bucketing
+    invariants ("a sweep over mixed-n traffic compiles at most one program
+    per bucket") are asserted against this counter by the service tests and
+    bench_ragged."""
+    return instrument.trace_count("ragged")
 
 
 def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
                    budget: int, metric: str = "l2",
                    backend: str = "reference",
-                   min_bucket: int = DEFAULT_MIN_BUCKET) -> jnp.ndarray:
+                   min_bucket: int = DEFAULT_MIN_BUCKET,
+                   donate: bool = False) -> jnp.ndarray:
     """Ragged multi-query medoid: ``data (B, n_max, d)`` + per-query
     ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length).
 
@@ -189,6 +156,9 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
 
     Raises ``ValueError`` on an all-padding query (``length < 1``) or a
     length exceeding ``n_max`` — rejected at admission, before any dispatch.
+    ``donate=True`` donates the (bucket-padded) arm buffer to the program —
+    only for callers that own the packed buffer and never reuse it (the
+    facade and the medoid server set it for buffers they packed themselves).
     """
     if data.ndim != 3:
         raise ValueError(f"expected (B, n_max, d) batch, got shape {data.shape}")
@@ -213,8 +183,11 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
     n_bucket = bucket_n(data.shape[1], min_bucket)
     if data.shape[1] < n_bucket:
         data = jnp.pad(data, ((0, 0), (0, n_bucket - data.shape[1]), (0, 0)))
-    return _ragged_impl(data, lengths, key, budget=budget, metric=metric,
-                        backend=backend, n_bucket=n_bucket)
+    instrument.note_dispatch("ragged")
+    fn = programs.ragged_program(n_bucket=n_bucket, budget=budget,
+                                 metric=metric, backend=backend,
+                                 donate=donate)
+    return fn(data, lengths, key)
 
 
 # ---------------------------------------------------------------------------

@@ -20,18 +20,31 @@ from repro.engine.estimators import (
 from repro.engine.halving import (
     HalvingOutcome,
     HalvingProblem,
+    default_order,
     default_select,
+    resolve_order_fn,
     resolve_select_fn,
     run_halving,
     sample_refs,
     sample_refs_masked,
 )
-from repro.engine.schedule import Round, round_schedule, schedule_pulls, stop_round
+from repro.engine.schedule import (
+    Round,
+    Schedule,
+    StackedBand,
+    StackedSchedule,
+    as_schedule,
+    round_schedule,
+    schedule_pulls,
+    stop_round,
+)
 
 __all__ = [
-    "ArmEstimator", "HalvingOutcome", "HalvingProblem", "Round",
-    "build_delta", "default_select", "get_estimator", "list_estimators",
-    "medoid_centrality", "register_estimator", "resolve_select_fn",
+    "ArmEstimator", "HalvingOutcome", "HalvingProblem", "Round", "Schedule",
+    "StackedBand", "StackedSchedule", "as_schedule",
+    "build_delta", "default_order", "default_select", "get_estimator",
+    "list_estimators", "medoid_centrality", "register_estimator",
+    "resolve_order_fn", "resolve_select_fn",
     "round_schedule", "run_halving", "sample_refs", "sample_refs_masked",
     "schedule_pulls", "stop_round", "swap_delta",
 ]

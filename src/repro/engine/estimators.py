@@ -32,6 +32,19 @@ automatically, so a new Pallas kernel for, say, ``build_delta`` plugs in
 without touching any engine or workload code. Third-party estimators
 register by name via :func:`register_estimator` (see the README's
 trimmed-mean example).
+
+**Scan-body-safe contract** (required since the round loop became a
+``lax.scan``): ``score`` must be a pure traced function of its array inputs
+— no host round-trips (item / host-array conversion / device fetches), no
+branching on concrete array *values*, no reliance on the number of rounds.
+``ref_mask``, when given, is a float *weight* vector over the reference
+axis and must enter multiplicatively (weight-0 references contribute
+exactly nothing to the sums): inside a scan band the engine passes
+positional validity (``position < t_r``) as weights over a fixed-width
+reference buffer, so any non-multiplicative mask handling would corrupt
+every scanned round. ``aux`` is only consumed from the *output* round (the
+engine discards it in scanned rounds), so it may be arbitrarily large.
+All built-in estimators and the fused Pallas paths satisfy this contract.
 """
 from __future__ import annotations
 

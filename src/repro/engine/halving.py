@@ -6,16 +6,29 @@ medoid, masked/ragged medoid, k-medoids BUILD, k-medoids SWAP. BanditPAM
 (Tiwari et al., 2020/2023) frames all of these as the *same* bandit argmin
 with different arm-loss estimators, and :func:`run_halving` says that in
 code: the workload plugs in an :class:`~repro.engine.estimators.ArmEstimator`
-and inherits masking, vmapped batching, the fused top-k epilogue, and the
-static-shape/one-XLA-program property for free.
+and inherits masking, vmapped batching, fused selection, and the
+one-XLA-program property for free.
+
+As of PR 6 the loop is **one program by construction**, not by unrolling:
+the halving rounds before the output round run as ``lax.scan`` over the
+schedule's stacked array form (:meth:`repro.engine.schedule.Schedule.stacked`)
+— a fixed-width survivor buffer kept sorted by estimate replaces the
+shrinking ``idx``, per-round live counts are positional masks, and
+reference draws are fixed-width permutation prefixes weighted by a
+positional validity mask. Rounds are grouped into *bands* (default 3 rounds
+per scan body) so XLA compiles O(log n / band) round bodies instead of
+O(log n), at a bounded fixed-width compute overhead. The **output round**
+(``r_stop``) still executes at its exact static legacy shapes outside the
+scan, so the outcome's ``theta``/``aux``/winner arithmetic is bit-identical
+to the pre-scan loop (scan rounds only make *selection* decisions, which are
+invariant to the sub-ulp reduction-order differences fixed-width masking
+introduces, except on exact ties already below estimator noise).
 
 Unified semantics, pinned by ``tests/test_engine.py`` against verbatim
 snapshots of the four pre-refactor loops (``tests/_legacy_loops.py``):
 
 * **key folding**: one sequential ``key, sub = jax.random.split(key)`` per
-  round (the audit of the four copies found they all agreed; the distributed
-  engines use ``fold_in(key, r)`` instead — a documented, pre-existing
-  divergence that is per-engine deterministic and unchanged here);
+  round (inside the scan carry — the same key sequence as the Python loop);
 * **reference draws**: uniform without replacement via permutation prefix
   (:func:`sample_refs`); with a ``ref_mask``, the valid-first stable
   partition (:func:`sample_refs_masked`) which degenerates to the unmasked
@@ -27,31 +40,36 @@ snapshots of the four pre-refactor loops (``tests/_legacy_loops.py``):
   ``+inf`` estimates — they never survive a halving ahead of an eligible arm
   and never win the final argmin;
 * **tie-break**: survivor selection and the final argmin resolve ties toward
-  the smaller index (``jax.lax.top_k`` on negated values / ``argmin``), for
-  every backend including the fused on-chip top-k.
+  the smaller *buffer position* (XLA's stable total-order sort — identical
+  to ``jax.lax.top_k`` on negated values, for every ``keep`` at once), for
+  every backend including the fused on-chip rank epilogue.
 
 The loop is a pure array program with static shapes only — safe under
 ``jax.vmap`` (the batched and ragged engines map it over a leading batch
-axis) and under ``jax.jit`` (the Python loop over rounds unrolls; the
-early-out branch is static, see :func:`repro.engine.schedule.stop_round`).
+axis) and under ``jax.jit``; :mod:`repro.engine.programs` provides the
+cached jitted entry points (with buffer donation) everything dispatches
+through.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.engine.schedule import Round
+from repro.engine.schedule import Round, StackedBand, as_schedule
 
-if TYPE_CHECKING:   # repro.core is imported lazily (see resolve_select_fn)
+if TYPE_CHECKING:   # repro.core is imported lazily (see resolve_order_fn)
     from repro.core.backend import DistanceBackend
     from repro.engine.estimators import ArmEstimator
 
 BackendLike = Union[str, "DistanceBackend", None]
 SelectFn = Callable[[jnp.ndarray, int], jnp.ndarray]
+OrderFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+# Rounds per scan body (the compile-vs-compute knob; see Schedule.stacked).
+DEFAULT_BAND_ROUNDS = 3
 
 
 # ----------------------------- reference draws ------------------------------
@@ -84,15 +102,25 @@ def sample_refs_masked(key: jax.Array, n: int, t: int,
 def default_select(theta: jnp.ndarray, keep: int) -> jnp.ndarray:
     """Survivor selection: indices of the ``keep`` smallest estimates,
     ascending, ties stable toward the smaller index (top_k on negated
-    values, static k)."""
+    values, static k). Kept for the distributed engines and as the
+    ``keep``-parameterized view of :func:`default_order`."""
     return jax.lax.top_k(-theta, keep)[1]
 
 
+def default_order(theta: jnp.ndarray) -> jnp.ndarray:
+    """Full stable ascending ordering of ``theta`` — ``default_select`` for
+    every ``keep`` simultaneously (XLA's sort and top_k share the same
+    stable float total order, including ``-0.0 < +0.0``). The scan-based
+    round loop reorders its fixed-width survivor buffer with this, and the
+    next round's positional live mask *is* the halving."""
+    return jnp.argsort(theta).astype(jnp.int32)
+
+
 def resolve_select_fn(backend: BackendLike) -> SelectFn:
-    """The halving step's top-k: a backend with a fused survivor-selection
-    epilogue (``survivor_topk``, e.g. ``pallas_fused_topk``) keeps it
-    on-chip; everyone else gets the default XLA top_k. Both have identical
-    stable-tie semantics, so the choice never changes survivors."""
+    """The static-``keep`` top-k of a backend (fused ``survivor_topk``
+    epilogue when registered, XLA top_k otherwise). The scan loop itself
+    selects via full orderings (:func:`resolve_order_fn`); this resolver
+    remains for API compatibility and the distributed engines."""
     # Imported at call (trace) time: the engine package sits BELOW repro.core
     # in the layering — repro.core.__init__ pulls in corr_sh, which is built
     # on this module, so a module-level import here would be circular.
@@ -100,6 +128,17 @@ def resolve_select_fn(backend: BackendLike) -> SelectFn:
 
     fn = get_backend(backend).survivor_topk
     return fn if fn is not None else default_select
+
+
+def resolve_order_fn(backend: BackendLike) -> OrderFn:
+    """The halving step's survivor ordering: a backend with a fused on-chip
+    rank epilogue (``survivor_order``, e.g. ``pallas_fused_topk``) keeps it
+    on-chip; everyone else gets the default XLA stable sort. Both have
+    identical stable-tie semantics, so the choice never changes survivors."""
+    from repro.core.backend import get_backend
+
+    fn = get_backend(backend).survivor_order
+    return fn if fn is not None else default_order
 
 
 # ------------------------------- the engine ---------------------------------
@@ -147,49 +186,106 @@ class HalvingOutcome:
     r_stop: int
 
 
-def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
-                backend: BackendLike = None, *, key: jax.Array,
-                survivor_topk: Optional[SelectFn] = None) -> HalvingOutcome:
-    """Run correlated sequential halving over ``schedule`` — the one round
-    loop every workload shares.
+def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
+               key: jax.Array, buf: jnp.ndarray):
+    """Run one band of halving rounds as a single ``lax.scan``.
 
-    ``backend`` only resolves the survivor-selection epilogue (pass
-    ``survivor_topk`` explicitly to skip the registry lookup, e.g. when
-    vmapping many problems over one resolved backend); the distance path
-    itself lives inside ``problem.estimator``. ``schedule`` must be non-empty
-    (``n == 1`` has an empty schedule — handle it at the call site, the
-    answer is arm 0).
+    ``buf`` is the fixed-width survivor buffer (``band.width`` global arm
+    indices, survivors in the sorted prefix). Each scanned round draws a
+    full permutation, takes its static ``ref_cap`` prefix as the reference
+    buffer, weights references by ``position < t_r`` (times the problem's
+    ``ref_mask`` validity, if any), masks arms at ``position >= s_r`` (the
+    live prefix) to ``+inf``, and re-sorts the buffer by estimate — the
+    next round's tighter live prefix *is* the halving.
     """
-    if not schedule:
-        raise ValueError("empty schedule: n == 1 needs no halving — the "
-                         "caller should short-circuit to arm 0")
-    select = survivor_topk if survivor_topk is not None \
-        else resolve_select_fn(backend)
     data, est = problem.data, problem.estimator
     n = data.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)   # surviving arm indices, shrinks
-    theta = aux = None
-    r_stop = len(schedule) - 1
-    for r, rd in enumerate(schedule):
+    width, cap = band.width, band.ref_cap
+    xs = (jnp.asarray(band.survivors, jnp.int32),
+          jnp.asarray(band.num_refs, jnp.int32))
+
+    def body(carry, sr_tr):
+        key, buf = carry
+        s_r, t_r = sr_tr
         key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n).astype(jnp.int32)
         if problem.ref_mask is not None:
-            refs = sample_refs_masked(sub, n, rd.num_refs, problem.ref_mask)
-            ref_mask = problem.ref_mask[refs].astype(jnp.float32)   # (t_r,)
-            denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+            perm = perm[jnp.argsort(jnp.where(problem.ref_mask[perm], 0, 1))]
+        refs = perm[:cap]                                 # static prefix
+        pos_ok = jnp.arange(cap, dtype=jnp.int32) < t_r   # this round's t_r
+        if problem.ref_mask is not None:
+            w = (pos_ok & problem.ref_mask[refs]).astype(jnp.float32)
+            denom = jnp.maximum(jnp.sum(w), 1.0)
         else:
-            refs = sample_refs(sub, n, rd.num_refs)
-            ref_mask = None
-            denom = refs.shape[0]          # static Python int
-        sums, aux = est.score(data[idx], data[refs], refs=refs,
-                              ref_mask=ref_mask)                    # (s_r,)
-        theta = sums / denom
+            w = pos_ok.astype(jnp.float32)
+            denom = t_r.astype(jnp.float32)
+        sums, _ = est.score(data[buf], data[refs], refs=refs, ref_mask=w)
+        theta = sums / denom                              # (width,)
+        alive = jnp.arange(width, dtype=jnp.int32) < s_r
+        theta = jnp.where(alive, theta, jnp.inf)
         if problem.arm_mask is not None:
-            theta = jnp.where(problem.arm_mask[idx], theta, jnp.inf)
-        if rd.exact or idx.shape[0] <= 2:
-            r_stop = r
-            break
-        keep = math.ceil(idx.shape[0] / 2)
-        idx = idx[select(theta, keep)]     # smallest-theta half survives
+            theta = jnp.where(problem.arm_mask[buf], theta, jnp.inf)
+        buf = buf[order_fn(theta)]        # stable: live ascending, dead last
+        return (key, buf), None
+
+    (key, buf), _ = jax.lax.scan(body, (key, buf), xs)
+    return key, buf
+
+
+def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
+                backend: BackendLike = None, *, key: jax.Array,
+                survivor_order: Optional[OrderFn] = None,
+                band_rounds: int = DEFAULT_BAND_ROUNDS) -> HalvingOutcome:
+    """Run correlated sequential halving over ``schedule`` — the one round
+    loop every workload shares, as one scanned array program.
+
+    ``backend`` only resolves the survivor-ordering epilogue (pass
+    ``survivor_order`` explicitly to skip the registry lookup, e.g. when
+    vmapping many problems over one resolved backend); the distance path
+    itself lives inside ``problem.estimator``. ``schedule`` must be
+    non-empty (``n == 1`` has an empty schedule — handle it at the call
+    site, the answer is arm 0). ``band_rounds`` groups the pre-output rounds
+    into scan bodies (see :meth:`repro.engine.schedule.Schedule.stacked`).
+
+    Estimators must honor the scan-body-safe contract (see
+    :mod:`repro.engine.estimators`): pure traced functions of their inputs
+    whose ``ref_mask`` weighting is multiplicative, since scanned rounds
+    pass positional validity as weights over fixed-width reference buffers.
+    """
+    sched = as_schedule(schedule)
+    if not len(sched):
+        raise ValueError("empty schedule: n == 1 needs no halving — the "
+                         "caller should short-circuit to arm 0")
+    order_fn = survivor_order if survivor_order is not None \
+        else resolve_order_fn(backend)
+    data, est = problem.data, problem.estimator
+    n = data.shape[0]
+    stk = sched.stacked(n, band_rounds=band_rounds)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    for band in stk.bands:
+        idx = idx[:band.width]            # static slice: sorted live prefix
+        key, idx = _scan_band(problem, band, order_fn, key, idx)
+
+    # Output round r_stop at its exact static legacy shapes — every value in
+    # the outcome (theta, aux, winner arithmetic) is computed here, outside
+    # the scan, bit-identically to the pre-scan loop.
+    rd = sched[stk.r_stop]
+    survivors = idx[:stk.sizes[stk.r_stop]]
+    key, sub = jax.random.split(key)
+    if problem.ref_mask is not None:
+        refs = sample_refs_masked(sub, n, rd.num_refs, problem.ref_mask)
+        ref_mask = problem.ref_mask[refs].astype(jnp.float32)    # (t,)
+        denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+    else:
+        refs = sample_refs(sub, n, rd.num_refs)
+        ref_mask = None
+        denom = refs.shape[0]              # static Python int
+    sums, aux = est.score(data[survivors], data[refs], refs=refs,
+                          ref_mask=ref_mask)
+    theta = sums / denom
+    if problem.arm_mask is not None:
+        theta = jnp.where(problem.arm_mask[survivors], theta, jnp.inf)
     pos = jnp.argmin(theta)
-    return HalvingOutcome(winner=idx[pos], winner_pos=pos, survivors=idx,
-                          theta=theta, aux=aux, r_stop=r_stop)
+    return HalvingOutcome(winner=survivors[pos], winner_pos=pos,
+                          survivors=survivors, theta=theta, aux=aux,
+                          r_stop=stk.r_stop)

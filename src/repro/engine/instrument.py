@@ -1,0 +1,53 @@
+"""Engine-wide dispatch/trace odometers.
+
+PR 2's ragged engine carried a single module-global compile counter
+(``_RAGGED_TRACES``) so tests and benchmarks could assert the bucketing
+invariant ("mixed-n traffic compiles at most one program per bucket"). This
+module generalizes that into one small instrument shared by every jitted
+engine entry point (:mod:`repro.engine.programs`):
+
+* ``note_trace(kind)`` — called *inside* a jitted body, so it runs exactly
+  once per XLA program traced for that entry point (retraces for new shapes
+  count; cached same-shape calls don't);
+* ``note_dispatch(kind)`` — called in the host-side wrapper, once per call.
+
+Both are monotone odometers (never reset): consumers assert on *deltas*,
+so independent test files and servers can't clobber each other. The
+steady-state claim of the one-program refactor — "repeated same-shape calls
+never retrace" — is exactly ``trace delta == 0`` while ``dispatch delta``
+grows, and ``counters()`` emits the full snapshot into ``BENCH_engine.json``
+so the dispatch-bound -> compute-bound shift is visible per PR.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+_TRACES: Counter = Counter()
+_DISPATCHES: Counter = Counter()
+
+
+def note_trace(kind: str) -> None:
+    """Record one XLA trace of the ``kind`` entry point (call at trace time,
+    i.e. from inside the jitted body)."""
+    _TRACES[kind] += 1
+
+
+def note_dispatch(kind: str) -> None:
+    """Record one host-side call into the ``kind`` entry point."""
+    _DISPATCHES[kind] += 1
+
+
+def trace_count(kind: str | None = None) -> int:
+    """Programs traced so far — for ``kind``, or in total."""
+    return _TRACES[kind] if kind is not None else sum(_TRACES.values())
+
+
+def dispatch_count(kind: str | None = None) -> int:
+    """Dispatches so far — for ``kind``, or in total."""
+    return _DISPATCHES[kind] if kind is not None else sum(_DISPATCHES.values())
+
+
+def counters() -> dict:
+    """Snapshot of both odometers (per kind), for benchmark emission."""
+    return {"traces": dict(sorted(_TRACES.items())),
+            "dispatches": dict(sorted(_DISPATCHES.items()))}

@@ -1,0 +1,171 @@
+"""Cached jitted entry points: every workload dispatches one XLA program.
+
+This is the execution layer of the one-program refactor. Each ``*_program``
+factory returns a jitted callable closed over its static configuration
+(``budget``/``metric``/``backend``/bucket), memoized in a module-level
+table — so the facade (:mod:`repro.api`), the serving layer, and the
+clustering pipeline all share literally the same compiled programs, keyed by
+``(kind, schedule config, backend, donation)`` plus jax's own shape key.
+Repeated same-shape calls never retrace (asserted counter-based in
+``tests/test_oneprogram.py`` via :mod:`repro.engine.instrument`).
+
+**Buffer donation**: pass ``donate=True`` to donate the arm buffer
+(argument 0) to the program — correct only when the caller owns the buffer
+and never touches it again (the facade enables it for buffers *it* packed;
+user-passed arrays are never donated). On backends without donation support
+(CPU) the flag is folded away so a donating and non-donating caller share
+one program instead of compiling twice; :func:`donation_enabled` reports
+the effective behavior.
+
+**Persistent compile cache**: :func:`enable_persistent_cache` points jax's
+compilation cache at a directory (thresholds dropped to cache-everything),
+so a restarted server re-*traces* known buckets but never re-*compiles*
+them. The ``JAX_COMPILATION_CACHE_DIR`` env var is jax's native equivalent.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import instrument
+from repro.engine.estimators import medoid_centrality
+from repro.engine.halving import HalvingProblem, resolve_order_fn, run_halving
+from repro.engine.schedule import round_schedule
+
+_PROGRAMS: dict[tuple, Callable] = {}
+
+
+def donation_enabled() -> bool:
+    """Whether buffer donation actually takes effect on this backend (jax
+    silently ignores donations on CPU; we fold the flag away there so the
+    donating and plain paths share one compiled program)."""
+    return jax.default_backend() not in ("cpu",)
+
+
+def program_cache_info() -> dict:
+    """Snapshot of the program table: kind -> number of cached callables."""
+    info: dict[str, int] = {}
+    for key in _PROGRAMS:
+        info[key[0]] = info.get(key[0], 0) + 1
+    return dict(sorted(info.items()))
+
+
+def _memo(key: tuple, build: Callable[[], Callable]) -> Callable:
+    fn = _PROGRAMS.get(key)
+    if fn is None:
+        fn = _PROGRAMS[key] = build()
+    return fn
+
+
+# ------------------------------ medoid programs -----------------------------
+
+def medoid_program(*, budget: int, metric: str = "l2",
+                   backend: str = "reference",
+                   donate: bool = False) -> Callable:
+    """Jitted single-query medoid: ``(data (n, d), key) -> scalar index``."""
+    eff_donate = donate and donation_enabled()
+
+    def build():
+        def impl(data: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+            instrument.note_trace("medoid")
+            rounds = round_schedule(data.shape[0], budget)
+            if not rounds:                        # n == 1
+                return jnp.zeros((), jnp.int32)
+            problem = HalvingProblem(data, medoid_centrality(backend, metric))
+            return run_halving(problem, rounds, backend, key=key).winner
+        return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
+
+    return _memo(("medoid", budget, metric, backend, eff_donate), build)
+
+
+def batch_program(*, budget: int, metric: str = "l2",
+                  backend: str = "reference",
+                  donate: bool = False) -> Callable:
+    """Jitted batched medoid: ``(data (B, n, d), key) -> (B,) indices``.
+
+    One shared static round schedule, per-query reference draws (the key is
+    split per query); the whole batch is a single vmap of the scanned round
+    loop — one XLA program, one dispatch.
+    """
+    eff_donate = donate and donation_enabled()
+
+    def build():
+        def impl(data: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+            instrument.note_trace("batch")
+            if data.ndim != 3:
+                raise ValueError(f"expected (B, n, d) batch, "
+                                 f"got shape {data.shape}")
+            b, n, _ = data.shape
+            rounds = round_schedule(n, budget)
+            keys = jax.random.split(key, b)
+            if not rounds:                        # n == 1
+                return jnp.zeros((b,), jnp.int32)
+            est = medoid_centrality(backend, metric)
+            order_fn = resolve_order_fn(backend)
+
+            def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
+                return run_halving(HalvingProblem(x, est), rounds, key=k,
+                                   survivor_order=order_fn).winner
+
+            return jax.vmap(one)(data, keys)
+        return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
+
+    return _memo(("batch", budget, metric, backend, eff_donate), build)
+
+
+def ragged_program(*, n_bucket: int, budget: int, metric: str = "l2",
+                   backend: str = "reference",
+                   donate: bool = False) -> Callable:
+    """Jitted ragged medoid: ``(data (B, n_bucket, d), lengths (B,), key) ->
+    (B,) indices``. Padded arms are masked out of every round (arm and
+    reference roles both); a query filling its bucket is bit-identical to
+    the single-query program."""
+    eff_donate = donate and donation_enabled()
+
+    def build():
+        def impl(data: jnp.ndarray, lengths: jnp.ndarray,
+                 key: jax.Array) -> jnp.ndarray:
+            instrument.note_trace("ragged")
+            b = data.shape[0]
+            rounds = round_schedule(n_bucket, budget)
+            if not rounds:                        # n_bucket == 1
+                return jnp.zeros((b,), jnp.int32)
+            valid = (jnp.arange(n_bucket, dtype=jnp.int32)[None, :]
+                     < lengths[:, None])
+            keys = jax.random.split(key, b)
+            est = medoid_centrality(backend, metric)
+            order_fn = resolve_order_fn(backend)
+
+            def one(x: jnp.ndarray, v: jnp.ndarray,
+                    k: jax.Array) -> jnp.ndarray:
+                # padded arms: ineligible to win (arm_mask) AND dropped from
+                # every reference draw / denominator (ref_mask) — one
+                # validity mask plays both roles.
+                problem = HalvingProblem(x, est, arm_mask=v, ref_mask=v)
+                return run_halving(problem, rounds, key=k,
+                                   survivor_order=order_fn).winner
+
+            return jax.vmap(one)(data, valid, keys)
+        return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
+
+    return _memo(("ragged", n_bucket, budget, metric, backend, eff_donate),
+                 build)
+
+
+# --------------------------- persistent compile cache ------------------------
+
+def enable_persistent_cache(cache_dir: str) -> str:
+    """Point jax's persistent compilation cache at ``cache_dir`` (created if
+    missing; thresholds dropped so every engine program is cached). A
+    restarted process pays tracing again but skips XLA compilation for every
+    program signature it has seen before — the warm-restart path the medoid
+    server's warmup route rides. Returns the absolute cache path."""
+    path = os.path.abspath(os.path.expanduser(cache_dir))
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return path

@@ -18,6 +18,7 @@ re-exported from :mod:`repro.core` unchanged.
 from __future__ import annotations
 
 import math
+from collections.abc import Sequence
 from dataclasses import dataclass
 
 
@@ -52,6 +53,106 @@ def round_schedule(n: int, budget: int) -> list[Round]:
         if s == 1:
             break
     return rounds
+
+
+# ---------------------------------------------------------------------------
+# stacked (scan-ready) schedule form
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StackedBand:
+    """A contiguous run of rounds executed as ONE ``lax.scan`` at one static
+    buffer shape.
+
+    ``width`` is the survivor-buffer width (the arm count *entering* the
+    band's first round) and ``ref_cap`` the reference-buffer width (the
+    largest ``t_r`` in the band); within the band, the per-round live counts
+    ``survivors``/``num_refs`` are applied as positional masks over those
+    fixed-width buffers. Banding bounds the fixed-width compute overhead: a
+    band of B halving rounds scores at most ``(2^B - 1)/B`` times the
+    scheduled pulls of its rounds, while the scan body compiles once per
+    band instead of once per round.
+    """
+    start: int                     # index of the band's first round
+    width: int                     # static survivor-buffer width
+    ref_cap: int                   # static reference-buffer width
+    survivors: tuple[int, ...]     # live arm count entering each round
+    num_refs: tuple[int, ...]      # t_r per round
+
+    def __len__(self) -> int:
+        return len(self.num_refs)
+
+
+@dataclass(frozen=True)
+class StackedSchedule:
+    """Array form of a schedule for ``n`` arms: the scanned prefix (bands
+    over rounds ``[0, r_stop)``) plus the static output round ``r_stop``.
+
+    ``sizes[r]`` is the number of arms *entering* round r (``sizes[0] == n``,
+    then ``ceil(size/2)`` per halving — the exact sizes the pre-scan Python
+    loop materialized), so ``sizes[r_stop]`` is the static width of the
+    output round's survivor set.
+    """
+    bands: tuple[StackedBand, ...]
+    r_stop: int
+    sizes: tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class Schedule(Sequence):
+    """A round schedule plus its scan-ready ``stacked()`` array form."""
+    rounds: tuple[Round, ...]
+
+    @classmethod
+    def from_budget(cls, n: int, budget: int) -> "Schedule":
+        return cls(tuple(round_schedule(n, budget)))
+
+    def __len__(self) -> int:
+        return len(self.rounds)
+
+    def __getitem__(self, i):
+        return self.rounds[i]
+
+    @property
+    def pulls(self) -> int:
+        return sum(r.pulls for r in self.rounds)
+
+    def stacked(self, n: int, *, band_rounds: int = 3) -> StackedSchedule:
+        """Band the schedule for an ``n``-arm problem (see
+        :class:`StackedBand`). ``band_rounds`` caps rounds per band (the
+        compile-vs-compute knob: 1 = per-round shapes, no waste; large =
+        one scan body, up to ``2^B/B``-fold extra scored pulls)."""
+        if band_rounds < 1:
+            raise ValueError(f"band_rounds must be >= 1, got {band_rounds}")
+        if not self.rounds:
+            raise ValueError("empty schedule has no stacked form")
+        sizes = [int(n)]
+        for _ in self.rounds[:-1]:
+            sizes.append(math.ceil(sizes[-1] / 2))
+        r_stop = len(self.rounds) - 1
+        for r, rd in enumerate(self.rounds):
+            if rd.exact or sizes[r] <= 2:
+                r_stop = r
+                break
+        bands = []
+        for start in range(0, r_stop, band_rounds):
+            stop = min(start + band_rounds, r_stop)
+            bands.append(StackedBand(
+                start=start,
+                width=sizes[start],
+                ref_cap=max(rd.num_refs for rd in self.rounds[start:stop]),
+                survivors=tuple(sizes[start:stop]),
+                num_refs=tuple(rd.num_refs
+                               for rd in self.rounds[start:stop])))
+        return StackedSchedule(bands=tuple(bands), r_stop=r_stop,
+                               sizes=tuple(sizes))
+
+
+def as_schedule(schedule) -> Schedule:
+    """Coerce a ``Sequence[Round]`` (or ``Schedule``) to a :class:`Schedule`."""
+    if isinstance(schedule, Schedule):
+        return schedule
+    return Schedule(tuple(schedule))
 
 
 def stop_round(schedule: list[Round]) -> int:

@@ -116,7 +116,13 @@ def main(argv=None):
                     help="also run exact PAM (O(n^2) — keep n modest)")
     ap.add_argument("--serve", action="store_true",
                     help="route refinement through the MedoidServer")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compile cache directory (repeat "
+                         "runs skip recompiling known program signatures)")
     args = ap.parse_args(argv)
+    if args.compile_cache:
+        from repro.engine.programs import enable_persistent_cache
+        enable_persistent_cache(args.compile_cache)
     print(json.dumps(run(
         args.n, args.d, args.k, args.dataset, metric=args.metric,
         backend=args.backend, seed=args.seed,

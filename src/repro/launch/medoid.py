@@ -123,7 +123,13 @@ def main(argv=None):
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--compare", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compile cache directory (repeat "
+                         "runs skip recompiling known program signatures)")
     args = ap.parse_args(argv)
+    if args.compile_cache:
+        from repro.engine.programs import enable_persistent_cache
+        enable_persistent_cache(args.compile_cache)
     print(json.dumps(run(args.n, args.d, args.metric, args.budget_per_arm,
                          args.dataset, seed=args.seed,
                          use_kernel=args.use_kernel,

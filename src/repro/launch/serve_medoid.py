@@ -13,7 +13,10 @@ distinct bucket no matter how traffic is shaped, and the compile odometer
 
 Per-request accounting mirrors a serving stack: queue-wait steps, batch wall
 time, and the schedule's pull count (distance evaluations) for the bucket the
-request rode in.
+request rode in. ``warmup()`` pre-traces expected buckets before traffic
+arrives, and ``compile_cache_dir=`` (CLI ``--compile-cache``) points jax's
+persistent compilation cache at a directory so a *restarted* server never
+re-compiles a bucket it has ever seen.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve_medoid --requests 24 \
@@ -35,6 +38,7 @@ from repro.core import get_backend, list_backends, round_schedule, schedule_pull
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n, pack_queries
 from repro.core.corr_sh import ragged_compile_count, ragged_medoids
 from repro.core.distances import METRICS
+from repro.engine import programs
 
 
 @dataclasses.dataclass
@@ -70,10 +74,15 @@ class MedoidServer:
 
     def __init__(self, *, metric: str = "l2", backend: str = "reference",
                  budget_per_arm: int = 24, max_batch: int = 8,
-                 min_bucket: int = DEFAULT_MIN_BUCKET, seed: int = 0):
+                 min_bucket: int = DEFAULT_MIN_BUCKET, seed: int = 0,
+                 compile_cache_dir: Optional[str] = None):
         if metric not in METRICS:
             raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
         get_backend(backend)      # fail at construction, not mid-dispatch
+        if compile_cache_dir:
+            # persistent XLA cache: a restarted server re-traces known
+            # buckets (cheap) but never re-compiles them (expensive)
+            programs.enable_persistent_cache(compile_cache_dir)
         self.metric = metric
         self.backend = backend
         self.budget_per_arm = budget_per_arm
@@ -110,6 +119,36 @@ class MedoidServer:
     def pending(self) -> int:
         return len(self.queue)
 
+    # -------------------------------- warmup ------------------------------
+    def warmup(self, shapes: list[tuple[int, int]]) -> dict:
+        """Pre-trace the dispatch program for each ``(n, d)`` signature by
+        answering a dummy batch at that bucket — a warmed server's first real
+        ``step()`` on a known bucket retraces nothing (and with a persistent
+        compile cache, a *restarted* warmed server recompiles nothing: warmup
+        pays tracing, XLA lowering is read back from disk). Warmup programs
+        don't count against :attr:`recompiles` — that odometer only tracks
+        traces observed during live dispatches. Returns per-bucket wall
+        times and the trace count the warmup itself incurred."""
+        timings: dict = {"buckets": {}, "traces": 0, "wall_s": 0.0}
+        compiles0 = ragged_compile_count()
+        t_all = time.time()
+        for n, d in shapes:
+            n_bucket = bucket_n(max(1, int(n)), self.min_bucket)
+            data, lengths = pack_queries(
+                [jnp.zeros((1, int(d)), jnp.float32)],
+                min_bucket=n_bucket, pad_batch_to=self.max_batch)
+            t0 = time.time()
+            ragged_medoids(data, lengths, jax.random.key(0),
+                           budget=self.budget_per_arm * n_bucket,
+                           metric=self.metric, backend=self.backend,
+                           min_bucket=self.min_bucket,
+                           donate=True).block_until_ready()
+            timings["buckets"][f"{n_bucket}x{int(d)}"] = round(
+                time.time() - t0, 4)
+        timings["traces"] = ragged_compile_count() - compiles0
+        timings["wall_s"] = round(time.time() - t_all, 4)
+        return timings
+
     # ------------------------------ scheduling ----------------------------
     def _bucket_key(self, req: MedoidRequest) -> tuple[int, int]:
         return (bucket_n(req.n, self.min_bucket), int(req.data.shape[1]))
@@ -141,9 +180,12 @@ class MedoidServer:
         compiles0 = ragged_compile_count()
         t0 = time.time()
         try:
+            # donate=True: the packed batch buffer is server-owned and dead
+            # after this dispatch — the engine may reuse its memory
             medoids = ragged_medoids(
                 data, lengths, sub, budget=budget, metric=self.metric,
-                backend=self.backend, min_bucket=self.min_bucket)
+                backend=self.backend, min_bucket=self.min_bucket,
+                donate=True)
             medoids = [int(m) for m in medoids]      # block until ready
         except Exception:
             # dispatch failed: requests go back to the head of the queue so
@@ -223,15 +265,26 @@ def main(argv=None):
     ap.add_argument("--arrivals-per-step", type=int, default=4,
                     help="requests admitted between scheduler steps")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compile cache directory (restarted "
+                         "servers skip recompiling known buckets)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-trace every bucket the synthetic trace will "
+                         "hit before admitting any request")
     args = ap.parse_args(argv)
     if args.arrivals_per_step < 1:
         ap.error("--arrivals-per-step must be >= 1")
 
     srv = MedoidServer(metric=args.metric, backend=args.backend,
                        budget_per_arm=args.budget_per_arm,
-                       max_batch=args.max_batch, seed=args.seed)
+                       max_batch=args.max_batch, seed=args.seed,
+                       compile_cache_dir=args.compile_cache)
     trace = synthetic_trace(args.requests, args.n_min, args.n_max, args.d,
                             seed=args.seed)
+    warmup_stats = None
+    if args.warmup:
+        shapes = sorted({(q.shape[0], q.shape[1]) for q in trace})
+        warmup_stats = srv.warmup(shapes)
     t0 = time.time()
     it = iter(trace)
     admitted = 0
@@ -245,6 +298,8 @@ def main(argv=None):
         srv.step()
     out = srv.stats()
     out["wall_s"] = round(time.time() - t0, 2)
+    if warmup_stats is not None:
+        out["warmup"] = warmup_stats
     out["schedules"] = {
         str(nb): [(r.survivors, r.num_refs)
                   for r in round_schedule(nb, args.budget_per_arm * nb)]

@@ -1,0 +1,208 @@
+"""One-program execution model: retrace safety, donation, host-sync guards.
+
+The PR-6 contract under test:
+
+* **retrace exactly once** — repeated same-shape ``find_medoid`` /
+  ``find_medoids_ragged`` / ``kmedoids`` calls trace one XLA program per
+  distinct signature and zero afterwards (counter-based, via the monotone
+  odometers of :mod:`repro.engine.instrument`);
+* **donation is safe and folded** — on CPU the donate flag folds away so
+  donating and plain callers share one compiled program; the facade's
+  self-packed (donated) ragged path answers identically to the caller-packed
+  (non-donated) path;
+* **no host syncs in the hot path** — the engine package and the cluster
+  BUILD/SWAP phase kernels contain no ``.item()`` / ``np.asarray`` /
+  ``device_get`` (source-level guard, mirrored by the CI grep);
+* **stacked schedules** — ``Schedule.stacked`` partitions exactly the
+  scanned prefix ``[0, r_stop)`` into bands with the legacy entering sizes;
+* **warmup + persistent cache** — a warmed ``MedoidServer`` serves known
+  buckets with zero recompiles, and ``enable_persistent_cache`` writes XLA
+  cache entries a restarted process can reuse.
+"""
+import inspect
+import math
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import find_medoid, find_medoids_ragged, kmedoids
+from repro.core.bucketing import pack_queries
+from repro.engine import instrument, programs
+from repro.engine.schedule import Schedule, as_schedule, round_schedule
+
+pytestmark = pytest.mark.engine
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+
+# ------------------------------ retrace safety ------------------------------
+
+def test_find_medoid_traces_exactly_once():
+    data = jax.random.normal(jax.random.key(0), (37, 5))
+    kw = dict(budget_per_arm=23, metric="l2", backend="reference")
+    t0, d0 = instrument.trace_count("medoid"), instrument.dispatch_count("medoid")
+    a = find_medoid(data, jax.random.key(1), **kw).medoid
+    traced = instrument.trace_count("medoid") - t0
+    assert traced <= 1          # 0 only if an identical config ran earlier
+    for i in range(3):          # same shape+config: never again
+        b = find_medoid(data, jax.random.key(1), **kw).medoid
+        assert b == a
+    assert instrument.trace_count("medoid") - t0 == traced
+    assert instrument.dispatch_count("medoid") - d0 == 4
+
+
+def test_ragged_traces_once_per_bucket():
+    qs = [jax.random.normal(jax.random.fold_in(jax.random.key(2), i), (n, 4))
+          for i, n in enumerate((11, 29, 43))]   # all bucket to 64
+    t0 = instrument.trace_count("ragged")
+    a = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
+    traced = instrument.trace_count("ragged") - t0
+    assert traced <= 1
+    b = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
+    assert [int(x) for x in a] == [int(x) for x in b]
+    assert instrument.trace_count("ragged") - t0 == traced
+
+
+def test_kmedoids_identical_rerun_traces_nothing():
+    data = jax.random.normal(jax.random.key(4), (40, 6))
+    res = kmedoids(data, 3, jax.random.key(5), build_budget_per_arm=13,
+                   swap_budget_per_arm=13, refine_budget_per_arm=13)
+    t0 = instrument.trace_count()
+    res2 = kmedoids(data, 3, jax.random.key(5), build_budget_per_arm=13,
+                    swap_budget_per_arm=13, refine_budget_per_arm=13)
+    assert instrument.trace_count() - t0 == 0     # every program is cached
+    assert (res2.medoids, res2.pulls, res2.swaps) == \
+        (res.medoids, res.pulls, res.swaps)
+
+
+# -------------------------------- donation ----------------------------------
+
+def test_donation_flag_folds_away_on_cpu():
+    kw = dict(budget=37 * 21, metric="l2", backend="reference")
+    if jax.default_backend() == "cpu":
+        assert not programs.donation_enabled()
+        # one program for both flags: no double compile, no CPU warning spam
+        assert programs.medoid_program(donate=True, **kw) \
+            is programs.medoid_program(donate=False, **kw)
+    else:
+        assert programs.donation_enabled()
+        assert programs.medoid_program(donate=True, **kw) \
+            is not programs.medoid_program(donate=False, **kw)
+
+
+def test_donated_facade_path_matches_nondonated():
+    qs = [jax.random.normal(jax.random.fold_in(jax.random.key(6), i), (n, 4))
+          for i, n in enumerate((17, 51))]
+    # list input: the facade packs (and donates) the buffer itself
+    a = find_medoids_ragged(qs, key=jax.random.key(7), budget_per_arm=19)
+    # caller-packed input: never donated, caller's buffer must survive
+    data, lens = pack_queries(qs)
+    b = find_medoids_ragged(data, lens, jax.random.key(7), budget_per_arm=19)
+    assert [int(x) for x in a] == [int(x) for x in b]
+    assert data.shape == (2, 64, 4)               # still alive and readable
+    assert bool(jnp.isfinite(data).all())
+
+
+# ----------------------- host-sync source-level guard -----------------------
+
+FORBIDDEN = (r"\.item\(", r"device_get", r"\bnp\.asarray")  # \b spares jnp.
+
+
+def test_no_host_syncs_in_engine_package():
+    import repro.engine.estimators
+    import repro.engine.halving
+    import repro.engine.programs
+    import repro.engine.schedule
+    for mod in (repro.engine.halving, repro.engine.estimators,
+                repro.engine.programs, repro.engine.schedule):
+        src = inspect.getsource(mod)
+        for pat in FORBIDDEN:
+            assert not re.search(pat, src), f"{pat!r} found in {mod.__name__}"
+
+
+def test_no_host_syncs_in_cluster_phase_kernels():
+    from repro.cluster import kmedoids as km
+    for fn in (km._build_step, km._build_scan, km._assign, km._top2_of,
+               km._swap_argmin, km._exact_swap_delta, km._swap_sweep_impl):
+        src = inspect.getsource(fn)
+        for pat in FORBIDDEN:
+            assert not re.search(pat, src), f"{pat!r} found in {fn.__name__}"
+
+
+# ----------------------------- stacked schedules ----------------------------
+
+def test_stacked_partitions_scanned_prefix():
+    for n, per_arm in ((512, 16), (300, 10), (17, 3), (4096, 24)):
+        sched = Schedule.from_budget(n, per_arm * n)
+        stk = sched.stacked(n)
+        # entering sizes follow the legacy halving recursion from n
+        assert stk.sizes[0] == n
+        for a, b in zip(stk.sizes, stk.sizes[1:]):
+            assert b == math.ceil(a / 2)
+        # bands tile [0, r_stop) exactly, in order, at the entering width
+        covered = []
+        for band in stk.bands:
+            assert band.width == stk.sizes[band.start]
+            assert band.ref_cap == max(band.num_refs)
+            assert band.survivors == tuple(
+                stk.sizes[band.start:band.start + len(band)])
+            covered.extend(range(band.start, band.start + len(band)))
+        assert covered == list(range(stk.r_stop))
+        # the output round is static: exact or <= 2 entering arms
+        rd = sched[stk.r_stop]
+        assert rd.exact or stk.sizes[stk.r_stop] <= 2
+
+
+def test_stacked_band_rounds_knob_and_errors():
+    sched = Schedule.from_budget(512, 16 * 512)
+    ones = sched.stacked(512, band_rounds=1)
+    assert all(len(b) == 1 for b in ones.bands)
+    big = sched.stacked(512, band_rounds=64)
+    assert len(big.bands) == 1 and big.r_stop == ones.r_stop
+    with pytest.raises(ValueError, match="band_rounds"):
+        sched.stacked(512, band_rounds=0)
+    with pytest.raises(ValueError, match="empty"):
+        Schedule(()).stacked(1)
+    assert as_schedule(round_schedule(64, 640)).rounds \
+        == Schedule.from_budget(64, 640).rounds
+
+
+# ------------------------- warmup + persistent cache ------------------------
+
+def test_warmed_server_never_recompiles():
+    from repro.launch.serve_medoid import MedoidServer, synthetic_trace
+
+    srv = MedoidServer(budget_per_arm=21, max_batch=4, seed=0)
+    trace = synthetic_trace(6, 16, 100, 5, seed=3)
+    stats = srv.warmup(sorted({(q.shape[0], q.shape[1]) for q in trace}))
+    assert set(stats) == {"buckets", "traces", "wall_s"}
+    for q in trace:
+        srv.submit(q)
+    srv.drain()
+    assert len(srv.done) == 6
+    assert srv.recompiles == 0     # every bucket was pre-traced by warmup
+
+
+@pytest.mark.slow
+def test_persistent_cache_writes_entries(tmp_path):
+    code = """
+import os, sys
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp
+from repro.engine import programs
+path = programs.enable_persistent_cache(sys.argv[1])
+fn = programs.medoid_program(budget=13 * 16)
+fn(jnp.zeros((16, 3)), jax.random.key(0)).block_until_ready()
+print(len(os.listdir(path)))
+"""
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    out = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip().splitlines()[-1]) >= 1
