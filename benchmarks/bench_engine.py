@@ -19,10 +19,17 @@ machine-checkable across PRs:
   once per program signature — or never, with the persistent compile
   cache). The informational ``ratio_vs_pr3`` compares steady-state against
   the committed single-call numbers;
-* the engine-wide dispatch/trace odometers (:mod:`repro.engine.instrument`)
-  are emitted as a final row, so the dispatch-bound -> compute-bound shift
-  is visible per PR: steady-state traffic grows ``dispatches`` while
-  ``traces`` stays put.
+* the dispatch/trace odometers (:mod:`repro.engine.instrument`) are emitted
+  as a final row of per-section **deltas** (``instrument.deltas()`` wraps
+  the whole section) — NOT the process-lifetime totals, which depended on
+  whatever ran earlier in the process and made the row change with section
+  order. The dispatch-bound -> compute-bound shift stays visible per PR:
+  steady-state traffic grows ``dispatches`` while ``traces`` stays put;
+* a **telemetry cell** re-answers the n=257 single-query cell with the
+  device-resident per-round trace enabled (:mod:`repro.obs.telemetry`):
+  asserts the answer is bit-identical to telemetry-off and that the
+  per-round pull column sums to the scheduled total, and emits the rows
+  into ``BENCH_engine.json`` (schema: ``repro.obs.telemetry.FIELDS``).
 
 ``python benchmarks/run.py --only engine`` writes ``BENCH_engine.json``.
 """
@@ -55,12 +62,14 @@ def _medoids_of(derived: str) -> str | None:
 
 def run(d: int = 16, seed: int = 0, ref_dir: str | None = None) -> list[dict]:
     from benchmarks import bench_ragged
-    from repro.api import KMedoidsConfig, kmedoids
+    from repro.api import KMedoidsConfig, find_medoid, kmedoids
     from repro.data.medoid_datasets import rnaseq_clusters
     from repro.engine import instrument
 
     ref_dir = ref_dir or _REPO
     rows: list[dict] = []
+    section = instrument.deltas()
+    section.__enter__()            # closed right before the counters row
 
     # ---- ragged cells through the facade (same keys as the PR-3 sweep) ----
     ref_ragged = _load_ref("BENCH_ragged.json", ref_dir)
@@ -116,8 +125,39 @@ def run(d: int = 16, seed: int = 0, ref_dir: str | None = None) -> list[dict]:
                  "compile_us": round(compile_us, 1),
                  "pulls": res.pulls, "derived": derived})
 
-    # ---- engine-wide odometers: the dispatch-bound -> compute-bound story --
-    c = instrument.counters()
+    # ---- telemetry cell: per-round trace rides the n=257 query for free ----
+    n_tel = 257
+    key_tel = jax.random.fold_in(jax.random.key(seed), 3)
+    data_tel = jax.random.normal(jax.random.fold_in(key_tel, 0), (n_tel, d))
+    plain = find_medoid(data_tel, jax.random.fold_in(key_tel, 1))
+    t0 = time.time()
+    traced = find_medoid(data_tel, jax.random.fold_in(key_tel, 1),
+                         telemetry=True)
+    compile_us = (time.time() - t0) * 1e6   # telemetry variant's first trace
+    t0 = time.time()
+    traced2 = find_medoid(data_tel, jax.random.fold_in(key_tel, 1),
+                          telemetry=True)
+    steady_us = (time.time() - t0) * 1e6
+    assert traced.medoid == plain.medoid == traced2.medoid, \
+        "telemetry changed the answer"
+    tel = {k: v.tolist() for k, v in traced.telemetry.items()}
+    assert sum(tel["pulls"]) == plain.pulls, \
+        (f"telemetry pull rows sum to {sum(tel['pulls'])}, "
+         f"scheduled total is {plain.pulls}")
+    rows.append({"name": f"engine_telemetry_n{n_tel}",
+                 "us_per_call": round(steady_us, 1),
+                 "compile_us": round(compile_us, 1),
+                 "pulls": plain.pulls, "telemetry": tel,
+                 "derived": (f"medoid={plain.medoid} identical_to_plain=True "
+                             f"rounds={len(tel['pulls'])} "
+                             f"pull_rows_sum={sum(tel['pulls'])}")})
+
+    # ---- section odometer deltas: dispatch-bound -> compute-bound story ----
+    # (deltas, not process-lifetime totals: totals made this row depend on
+    # whatever ran earlier in the process, so BENCH_engine.json changed with
+    # section execution order)
+    section.__exit__(None, None, None)
+    c = section.counters()
     rows.append({"name": "engine_dispatch_counters", "us_per_call": 0.0,
                  "counters": c,
                  "derived": (f"traces={sum(c['traces'].values())} "

@@ -37,7 +37,7 @@ def _normalize(r: dict) -> dict:
     # first-call (trace+compile) vs steady-state split, where a section
     # reports it — us_per_call alone conflates one-time compilation with
     # the recurring serving cost the one-program engine optimizes for
-    for key in ("compile_us", "steady_us", "counters"):
+    for key in ("compile_us", "steady_us", "counters", "telemetry"):
         if key in r:
             out[key] = r[key]
     return out

@@ -43,6 +43,7 @@ from repro.core.exact import exact_medoid
 from repro.core.meddit import meddit_medoid
 from repro.core.rand import rand_medoid
 from repro.engine import round_schedule, stop_round
+from repro.obs import telemetry_to_host
 
 ALGOS = ("corr_sh", "meddit", "rand", "exact")
 
@@ -61,13 +62,18 @@ class MedoidConfig:
     power-of-two bucket). ``algo`` selects the algorithm behind the facade:
     ``corr_sh`` (the paper; the only one with batch/ragged modes), the
     ``meddit`` UCB baseline, the ``rand`` non-adaptive baseline
-    (``budget_per_arm`` references), or the ``exact`` O(n^2) oracle."""
+    (``budget_per_arm`` references), or the ``exact`` O(n^2) oracle.
+
+    ``telemetry`` additionally returns the fixed-shape per-round trace of
+    :mod:`repro.obs.telemetry` (host numpy, one row per executed round) —
+    same single dispatch, bit-identical answers; ``corr_sh`` only."""
     metric: str = "l2"
     backend: str = "reference"
     budget_per_arm: int = 24
     algo: str = "corr_sh"
     min_bucket: int = DEFAULT_MIN_BUCKET
     seed: int = 0          # key when the caller passes none
+    telemetry: bool = False
 
 
 @dataclass(frozen=True)
@@ -96,6 +102,8 @@ class MedoidResult:
     metric: str
     backend: str
     rounds: tuple = ()     # (survivors, num_refs) per executed round
+    telemetry: Optional[dict] = None   # per-round trace (host numpy) when
+    #                                    MedoidConfig.telemetry is set
 
 
 def _resolve(config, overrides, cls):
@@ -131,6 +139,10 @@ def find_medoid(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
     n = int(data.shape[0])
     key = _key_of(key, cfg)
     budget = cfg.budget_per_arm * n
+
+    if cfg.telemetry and (cfg.algo != "corr_sh" or mesh is not None):
+        raise ValueError("telemetry=True requires algo='corr_sh' without "
+                         "mesh= (only the engine round loop is instrumented)")
 
     if mesh is not None:
         if cfg.algo != "corr_sh":
@@ -170,10 +182,20 @@ def find_medoid(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
                             backend=cfg.backend)
 
     if n == 1:
+        tel = None
+        if cfg.telemetry:
+            from repro.obs import telemetry as obs_telemetry
+            tel = telemetry_to_host(obs_telemetry.empty())
         return MedoidResult(medoid=0, pulls=0, n=1, algo="corr_sh",
-                            metric=cfg.metric, backend=cfg.backend)
-    medoid = int(_medoid_impl(data, key, budget=budget, metric=cfg.metric,
-                              backend=cfg.backend))
+                            metric=cfg.metric, backend=cfg.backend,
+                            telemetry=tel)
+    out = _medoid_impl(data, key, budget=budget, metric=cfg.metric,
+                       backend=cfg.backend, telemetry=cfg.telemetry)
+    tel = None
+    if cfg.telemetry:
+        out, tel = out
+        tel = telemetry_to_host(tel)
+    medoid = int(out)
     rounds = round_schedule(n, budget)
     executed = rounds[: stop_round(rounds) + 1]
     return MedoidResult(medoid=medoid,
@@ -181,7 +203,8 @@ def find_medoid(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
                         algo="corr_sh", metric=cfg.metric,
                         backend=cfg.backend,
                         rounds=tuple((r.survivors, r.num_refs)
-                                     for r in executed))
+                                     for r in executed),
+                        telemetry=tel)
 
 
 # -------------------------------- multi query -------------------------------
@@ -191,16 +214,23 @@ def find_medoids_batch(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
                        **overrides) -> jnp.ndarray:
     """Answer a ``(B, n, d)`` batch of independent medoid queries in one XLA
     dispatch (one shared static schedule, per-query reference draws).
-    Returns the ``(B,)`` int32 medoid indices."""
+    Returns the ``(B,)`` int32 medoid indices — or, with
+    ``telemetry=True``, ``(indices, telemetry)`` where the telemetry leaves
+    are host ``(B, R)`` arrays (one row per query per executed round)."""
     cfg = _resolve(config, overrides, MedoidConfig)
     if cfg.algo != "corr_sh":
         raise ValueError(f"batched mode requires algo='corr_sh', "
                          f"got {cfg.algo!r}")
     data = jnp.asarray(data)
     n = int(data.shape[1]) if data.ndim == 3 else 0
-    return _batch_impl(data, _key_of(key, cfg),
-                       budget=cfg.budget_per_arm * max(n, 1),
-                       metric=cfg.metric, backend=cfg.backend)
+    out = _batch_impl(data, _key_of(key, cfg),
+                      budget=cfg.budget_per_arm * max(n, 1),
+                      metric=cfg.metric, backend=cfg.backend,
+                      telemetry=cfg.telemetry)
+    if cfg.telemetry:
+        medoids, tel = out
+        return medoids, telemetry_to_host(tel)
+    return out
 
 
 def find_medoids_ragged(data, lengths=None,
@@ -214,7 +244,9 @@ def find_medoids_ragged(data, lengths=None,
     :func:`repro.core.bucketing.pack_queries`). The bucket's budget is
     ``budget_per_arm * n_bucket``; padding is masked inside every round, and
     a query filling its bucket is bit-identical to the single-query path.
-    Returns the ``(B,)`` int32 medoid indices (each < its query's length).
+    Returns the ``(B,)`` int32 medoid indices (each < its query's length) —
+    or ``(indices, telemetry)`` with ``telemetry=True`` (host ``(B, R)``
+    leaves; schedule columns are the bucket's).
     """
     cfg = _resolve(config, overrides, MedoidConfig)
     if cfg.algo != "corr_sh":
@@ -234,10 +266,15 @@ def find_medoids_ragged(data, lengths=None,
     n_bucket = int(data.shape[1]) if data.ndim == 3 else 1
     from repro.core.bucketing import bucket_n
     n_bucket = bucket_n(n_bucket, cfg.min_bucket)
-    return ragged_medoids(data, lengths, _key_of(key, cfg),
-                          budget=cfg.budget_per_arm * n_bucket,
-                          metric=cfg.metric, backend=cfg.backend,
-                          min_bucket=cfg.min_bucket, donate=donate)
+    out = ragged_medoids(data, lengths, _key_of(key, cfg),
+                         budget=cfg.budget_per_arm * n_bucket,
+                         metric=cfg.metric, backend=cfg.backend,
+                         min_bucket=cfg.min_bucket, donate=donate,
+                         telemetry=cfg.telemetry)
+    if cfg.telemetry:
+        medoids, tel = out
+        return medoids, telemetry_to_host(tel)
+    return out
 
 
 # -------------------------------- clustering --------------------------------

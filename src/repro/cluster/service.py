@@ -8,6 +8,13 @@ cluster subproblem as a service request, so a clustering job shares the
 server's bucketed dispatch, fixed-slot batching, and compile-odometer
 guarantees with every other tenant's medoid traffic (and its per-request
 accounting: the pulls reported are the server's scheduled pulls).
+
+:class:`ClusterService` is the observability facade over a live server: a
+tiny route table (``/stats``, ``/metrics``, ``/buckets``) serving the
+scheduler accounting, the JSON metrics snapshot, and the Prometheus text
+exposition — the same payloads an HTTP front-end would mount, minus the
+HTTP (the container ships no web stack, and the tests exercise the routes
+directly).
 """
 from __future__ import annotations
 
@@ -33,6 +40,52 @@ class ServiceRefiner:
         answered = [self.server.done[r] for r in rids]
         return ([int(r.medoid) for r in answered],
                 sum(r.pulls for r in answered))
+
+
+class ClusterService:
+    """Route-level view of a :class:`~repro.launch.serve_medoid.MedoidServer`
+    (observability endpoints a front-end would mount verbatim)::
+
+        svc = ClusterService(server)
+        svc.handle("/stats")     # scheduler accounting + metrics snapshot
+        svc.handle("/metrics")   # Prometheus text exposition (str)
+        svc.handle("/buckets")   # compiled-bucket inventory
+
+    ``routes()`` lists the table; unknown paths raise ``KeyError`` (a 404).
+    """
+
+    def __init__(self, server):
+        self.server = server
+        self._routes = {"/stats": self.stats, "/metrics": self.metrics,
+                        "/buckets": self.buckets}
+
+    def routes(self) -> tuple:
+        return tuple(sorted(self._routes))
+
+    def handle(self, path: str):
+        try:
+            route = self._routes[path]
+        except KeyError:
+            raise KeyError(f"no route {path!r}; one of {self.routes()}"
+                           ) from None
+        return route()
+
+    def stats(self) -> dict:
+        """The ``/stats`` payload: the server's scheduler accounting plus
+        the JSON metrics snapshot (one response answers both "is the queue
+        healthy" and "what are the per-bucket latency/wait distributions")."""
+        return {**self.server.stats(), "metrics": self.server.metrics()}
+
+    def metrics(self) -> str:
+        """The ``/metrics`` payload: Prometheus text exposition."""
+        return self.server.exposition()
+
+    def buckets(self) -> dict:
+        """The ``/buckets`` payload: compiled-shape inventory."""
+        return {"buckets": sorted(f"{nb}x{d}"
+                                  for nb, d in self.server.buckets_seen),
+                "recompiles": self.server.recompiles,
+                "dispatches": self.server.dispatches}
 
 
 def kmedoids_via_service(data, k: int, key: jax.Array, *,

@@ -94,19 +94,23 @@ def correlated_sequential_halving(
 
 def _medoid_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
                  metric: str = "l2", backend: str = "reference",
-                 donate: bool = False) -> jnp.ndarray:
+                 donate: bool = False, telemetry: bool = False):
     """Single-query medoid (the facade's ``find_medoid`` kernel): dispatch
-    the cached jitted program for this (budget, metric, backend) config."""
+    the cached jitted program for this (budget, metric, backend) config.
+    With ``telemetry`` the program returns ``(index, per-round telemetry)``
+    — same single dispatch (see :mod:`repro.obs.telemetry`)."""
     instrument.note_dispatch("medoid")
     fn = programs.medoid_program(budget=budget, metric=metric,
-                                 backend=backend, donate=donate)
+                                 backend=backend, donate=donate,
+                                 telemetry=telemetry)
     return fn(data, key)
 
 
 def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
                 metric: str = "l2", backend: str = "reference",
-                donate: bool = False) -> jnp.ndarray:
-    """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices.
+                donate: bool = False, telemetry: bool = False):
+    """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices
+    (``((B,), telemetry)`` with ``telemetry``).
 
     All queries share one static round schedule (shapes depend only on
     ``(n, budget)``), so the whole batch is a single ``vmap`` of the round
@@ -119,7 +123,8 @@ def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
         raise ValueError(f"expected (B, n, d) batch, got shape {data.shape}")
     instrument.note_dispatch("batch")
     fn = programs.batch_program(budget=budget, metric=metric,
-                                backend=backend, donate=donate)
+                                backend=backend, donate=donate,
+                                telemetry=telemetry)
     return fn(data, key)
 
 
@@ -141,9 +146,10 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
                    budget: int, metric: str = "l2",
                    backend: str = "reference",
                    min_bucket: int = DEFAULT_MIN_BUCKET,
-                   donate: bool = False) -> jnp.ndarray:
+                   donate: bool = False, telemetry: bool = False):
     """Ragged multi-query medoid: ``data (B, n_max, d)`` + per-query
-    ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length).
+    ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length);
+    ``((B,) indices, telemetry)`` with ``telemetry``.
 
     Queries of heterogeneous sizes ride one XLA program: ``n_max`` is rounded
     up to a power-of-two bucket (see :mod:`repro.core.bucketing` — this caps
@@ -186,7 +192,7 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
     instrument.note_dispatch("ragged")
     fn = programs.ragged_program(n_bucket=n_bucket, budget=budget,
                                  metric=metric, backend=backend,
-                                 donate=donate)
+                                 donate=donate, telemetry=telemetry)
     return fn(data, lengths, key)
 
 

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.schedule import Round, StackedBand, as_schedule
+from repro.obs import telemetry as obs_telemetry
 
 if TYPE_CHECKING:   # repro.core is imported lazily (see resolve_order_fn)
     from repro.core.backend import DistanceBackend
@@ -177,6 +178,9 @@ class HalvingOutcome:
     at the winner (the SWAP estimator reads its ``(C, k)`` delta this way).
     ``theta`` holds the output round's estimates over ``survivors`` and
     ``r_stop`` the (static) index of that round, for pull accounting.
+    ``telemetry`` is ``None`` unless the run carried round telemetry — then
+    it is the fixed-shape per-round dict of :mod:`repro.obs.telemetry` (one
+    row per executed round, scanned rounds + the output round).
     """
     winner: jnp.ndarray
     winner_pos: jnp.ndarray
@@ -184,10 +188,11 @@ class HalvingOutcome:
     theta: jnp.ndarray
     aux: Any
     r_stop: int
+    telemetry: Any = None
 
 
 def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
-               key: jax.Array, buf: jnp.ndarray):
+               key: jax.Array, buf: jnp.ndarray, telemetry: bool = False):
     """Run one band of halving rounds as a single ``lax.scan``.
 
     ``buf`` is the fixed-width survivor buffer (``band.width`` global arm
@@ -197,6 +202,11 @@ def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
     ``ref_mask`` validity, if any), masks arms at ``position >= s_r`` (the
     live prefix) to ``+inf``, and re-sorts the buffer by estimate — the
     next round's tighter live prefix *is* the halving.
+
+    With ``telemetry`` the scan additionally stacks one
+    :func:`repro.obs.telemetry.round_stats` row per round (computed on the
+    exact masked ``theta`` selection sees) as its ys — pure extra outputs,
+    so the carry (and every selection decision) is untouched.
     """
     data, est = problem.data, problem.estimator
     n = data.shape[0]
@@ -225,17 +235,19 @@ def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
         theta = jnp.where(alive, theta, jnp.inf)
         if problem.arm_mask is not None:
             theta = jnp.where(problem.arm_mask[buf], theta, jnp.inf)
+        ys = obs_telemetry.round_stats(theta) if telemetry else None
         buf = buf[order_fn(theta)]        # stable: live ascending, dead last
-        return (key, buf), None
+        return (key, buf), ys
 
-    (key, buf), _ = jax.lax.scan(body, (key, buf), xs)
-    return key, buf
+    (key, buf), rows = jax.lax.scan(body, (key, buf), xs)
+    return key, buf, rows
 
 
 def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
                 backend: BackendLike = None, *, key: jax.Array,
                 survivor_order: Optional[OrderFn] = None,
-                band_rounds: int = DEFAULT_BAND_ROUNDS) -> HalvingOutcome:
+                band_rounds: int = DEFAULT_BAND_ROUNDS,
+                telemetry: bool = False) -> HalvingOutcome:
     """Run correlated sequential halving over ``schedule`` — the one round
     loop every workload shares, as one scanned array program.
 
@@ -246,6 +258,13 @@ def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
     non-empty (``n == 1`` has an empty schedule — handle it at the call
     site, the answer is arm 0). ``band_rounds`` groups the pre-output rounds
     into scan bodies (see :meth:`repro.engine.schedule.Schedule.stacked`).
+
+    ``telemetry`` additionally carries the fixed-shape per-round telemetry
+    buffer of :mod:`repro.obs.telemetry` through the scan (one row per
+    executed round) into ``HalvingOutcome.telemetry``. Telemetry is pure
+    extra outputs over the same key sequence, draws, and estimates — the
+    winner, survivors, ``theta``, and ``aux`` are bitwise identical with it
+    on or off (pinned by ``tests/test_obs.py``).
 
     Estimators must honor the scan-body-safe contract (see
     :mod:`repro.engine.estimators`): pure traced functions of their inputs
@@ -262,9 +281,13 @@ def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
     n = data.shape[0]
     stk = sched.stacked(n, band_rounds=band_rounds)
     idx = jnp.arange(n, dtype=jnp.int32)
+    scanned_rows = []
     for band in stk.bands:
         idx = idx[:band.width]            # static slice: sorted live prefix
-        key, idx = _scan_band(problem, band, order_fn, key, idx)
+        key, idx, rows = _scan_band(problem, band, order_fn, key, idx,
+                                    telemetry=telemetry)
+        if telemetry:
+            scanned_rows.append(rows)
 
     # Output round r_stop at its exact static legacy shapes — every value in
     # the outcome (theta, aux, winner arithmetic) is computed here, outside
@@ -286,6 +309,13 @@ def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
     if problem.arm_mask is not None:
         theta = jnp.where(problem.arm_mask[survivors], theta, jnp.inf)
     pos = jnp.argmin(theta)
+    tel = None
+    if telemetry:
+        rows = scanned_rows + [jax.tree_util.tree_map(
+            lambda x: x[None], obs_telemetry.round_stats(theta))]
+        measured = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *rows)
+        tel = obs_telemetry.assemble(sched[: stk.r_stop + 1], measured)
     return HalvingOutcome(winner=survivors[pos], winner_pos=pos,
                           survivors=survivors, theta=theta, aux=aux,
-                          r_stop=stk.r_stop)
+                          r_stop=stk.r_stop, telemetry=tel)

@@ -51,3 +51,57 @@ def counters() -> dict:
     """Snapshot of both odometers (per kind), for benchmark emission."""
     return {"traces": dict(sorted(_TRACES.items())),
             "dispatches": dict(sorted(_DISPATCHES.items()))}
+
+
+class deltas:
+    """Context helper over the monotone odometers: snapshot on enter, deltas
+    on demand — so consumers stop hand-rolling ``before = trace_count(...)``
+    / ``after - before`` arithmetic::
+
+        with instrument.deltas() as d:
+            find_medoid(data, key)
+        assert d.trace("medoid") <= 1      # programs traced inside the block
+        assert d.dispatch("medoid") == 1   # dispatches inside the block
+
+    Deltas are readable both mid-block and after exit (exit freezes them, so
+    work done later never contaminates a recorded measurement). ``counters()``
+    returns the per-kind nonzero deltas in the same shape as the module-level
+    :func:`counters` snapshot — that per-block form is what benchmark cells
+    emit, keeping ``BENCH_*.json`` rows independent of execution order.
+    """
+
+    def __enter__(self) -> "deltas":
+        self._t0 = Counter(_TRACES)
+        self._d0 = Counter(_DISPATCHES)
+        self._t1 = self._d1 = None
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._t1 = Counter(_TRACES)
+        self._d1 = Counter(_DISPATCHES)
+
+    def _now(self) -> tuple[Counter, Counter]:
+        if self._t1 is not None:
+            return self._t1, self._d1
+        return _TRACES, _DISPATCHES
+
+    def trace(self, kind: str | None = None) -> int:
+        """Programs traced since enter — for ``kind``, or in total."""
+        cur, _ = self._now()
+        if kind is not None:
+            return cur[kind] - self._t0[kind]
+        return sum(cur.values()) - sum(self._t0.values())
+
+    def dispatch(self, kind: str | None = None) -> int:
+        """Dispatches since enter — for ``kind``, or in total."""
+        _, cur = self._now()
+        if kind is not None:
+            return cur[kind] - self._d0[kind]
+        return sum(cur.values()) - sum(self._d0.values())
+
+    def counters(self) -> dict:
+        """Per-kind nonzero deltas, same shape as the module snapshot."""
+        t, d = self._now()
+        return {"traces": {k: v for k, v in sorted((t - self._t0).items())},
+                "dispatches": {k: v
+                               for k, v in sorted((d - self._d0).items())}}

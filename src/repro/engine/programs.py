@@ -5,9 +5,12 @@ factory returns a jitted callable closed over its static configuration
 (``budget``/``metric``/``backend``/bucket), memoized in a module-level
 table — so the facade (:mod:`repro.api`), the serving layer, and the
 clustering pipeline all share literally the same compiled programs, keyed by
-``(kind, schedule config, backend, donation)`` plus jax's own shape key.
-Repeated same-shape calls never retrace (asserted counter-based in
-``tests/test_oneprogram.py`` via :mod:`repro.engine.instrument`).
+``(kind, schedule config, backend, donation, telemetry)`` plus jax's own
+shape key. Repeated same-shape calls never retrace (asserted counter-based
+in ``tests/test_oneprogram.py`` via :mod:`repro.engine.instrument`); a
+telemetry-carrying variant is its own cached program (more outputs), so
+turning telemetry on costs one extra trace per signature — once — and
+nothing per call thereafter.
 
 **Buffer donation**: pass ``donate=True`` to donate the arm buffer
 (argument 0) to the program — correct only when the caller owns the buffer
@@ -34,6 +37,7 @@ from repro.engine import instrument
 from repro.engine.estimators import medoid_centrality
 from repro.engine.halving import HalvingProblem, resolve_order_fn, run_halving
 from repro.engine.schedule import round_schedule
+from repro.obs import telemetry as obs_telemetry
 
 _PROGRAMS: dict[tuple, Callable] = {}
 
@@ -63,28 +67,37 @@ def _memo(key: tuple, build: Callable[[], Callable]) -> Callable:
 # ------------------------------ medoid programs -----------------------------
 
 def medoid_program(*, budget: int, metric: str = "l2",
-                   backend: str = "reference",
-                   donate: bool = False) -> Callable:
-    """Jitted single-query medoid: ``(data (n, d), key) -> scalar index``."""
+                   backend: str = "reference", donate: bool = False,
+                   telemetry: bool = False) -> Callable:
+    """Jitted single-query medoid: ``(data (n, d), key) -> scalar index`` —
+    or ``(index, telemetry dict)`` with ``telemetry`` (the per-round buffer
+    of :mod:`repro.obs.telemetry` rides the same single program)."""
     eff_donate = donate and donation_enabled()
 
     def build():
-        def impl(data: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        def impl(data: jnp.ndarray, key: jax.Array):
             instrument.note_trace("medoid")
             rounds = round_schedule(data.shape[0], budget)
             if not rounds:                        # n == 1
-                return jnp.zeros((), jnp.int32)
+                winner = jnp.zeros((), jnp.int32)
+                return (winner, obs_telemetry.empty()) if telemetry \
+                    else winner
             problem = HalvingProblem(data, medoid_centrality(backend, metric))
-            return run_halving(problem, rounds, backend, key=key).winner
+            out = run_halving(problem, rounds, backend, key=key,
+                              telemetry=telemetry)
+            return (out.winner, out.telemetry) if telemetry else out.winner
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("medoid", budget, metric, backend, eff_donate), build)
+    return _memo(("medoid", budget, metric, backend, eff_donate, telemetry),
+                 build)
 
 
 def batch_program(*, budget: int, metric: str = "l2",
-                  backend: str = "reference",
-                  donate: bool = False) -> Callable:
-    """Jitted batched medoid: ``(data (B, n, d), key) -> (B,) indices``.
+                  backend: str = "reference", donate: bool = False,
+                  telemetry: bool = False) -> Callable:
+    """Jitted batched medoid: ``(data (B, n, d), key) -> (B,) indices`` —
+    or ``((B,) indices, telemetry)`` with ``telemetry`` (per-query rows,
+    leaves ``(B, R)``; the shared static schedule columns broadcast).
 
     One shared static round schedule, per-query reference draws (the key is
     split per query); the whole batch is a single vmap of the scanned round
@@ -93,7 +106,7 @@ def batch_program(*, budget: int, metric: str = "l2",
     eff_donate = donate and donation_enabled()
 
     def build():
-        def impl(data: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        def impl(data: jnp.ndarray, key: jax.Array):
             instrument.note_trace("batch")
             if data.ndim != 3:
                 raise ValueError(f"expected (B, n, d) batch, "
@@ -102,57 +115,76 @@ def batch_program(*, budget: int, metric: str = "l2",
             rounds = round_schedule(n, budget)
             keys = jax.random.split(key, b)
             if not rounds:                        # n == 1
-                return jnp.zeros((b,), jnp.int32)
+                winners = jnp.zeros((b,), jnp.int32)
+                if telemetry:
+                    return winners, jax.tree_util.tree_map(
+                        lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+                        obs_telemetry.empty())
+                return winners
             est = medoid_centrality(backend, metric)
             order_fn = resolve_order_fn(backend)
 
-            def one(x: jnp.ndarray, k: jax.Array) -> jnp.ndarray:
-                return run_halving(HalvingProblem(x, est), rounds, key=k,
-                                   survivor_order=order_fn).winner
+            def one(x: jnp.ndarray, k: jax.Array):
+                out = run_halving(HalvingProblem(x, est), rounds, key=k,
+                                  survivor_order=order_fn,
+                                  telemetry=telemetry)
+                return (out.winner, out.telemetry) if telemetry \
+                    else out.winner
 
             return jax.vmap(one)(data, keys)
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("batch", budget, metric, backend, eff_donate), build)
+    return _memo(("batch", budget, metric, backend, eff_donate, telemetry),
+                 build)
 
 
 def ragged_program(*, n_bucket: int, budget: int, metric: str = "l2",
-                   backend: str = "reference",
-                   donate: bool = False) -> Callable:
+                   backend: str = "reference", donate: bool = False,
+                   telemetry: bool = False) -> Callable:
     """Jitted ragged medoid: ``(data (B, n_bucket, d), lengths (B,), key) ->
-    (B,) indices``. Padded arms are masked out of every round (arm and
-    reference roles both); a query filling its bucket is bit-identical to
-    the single-query program."""
+    (B,) indices`` — or ``((B,) indices, telemetry)`` with ``telemetry``
+    (leaves ``(B, R)``; the measured rows differ per query through its
+    ``alive`` count and masked estimates, the schedule columns are the
+    bucket's and broadcast). Padded arms are masked out of every round (arm
+    and reference roles both); a query filling its bucket is bit-identical
+    to the single-query program."""
     eff_donate = donate and donation_enabled()
 
     def build():
         def impl(data: jnp.ndarray, lengths: jnp.ndarray,
-                 key: jax.Array) -> jnp.ndarray:
+                 key: jax.Array):
             instrument.note_trace("ragged")
             b = data.shape[0]
             rounds = round_schedule(n_bucket, budget)
             if not rounds:                        # n_bucket == 1
-                return jnp.zeros((b,), jnp.int32)
+                winners = jnp.zeros((b,), jnp.int32)
+                if telemetry:
+                    return winners, jax.tree_util.tree_map(
+                        lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+                        obs_telemetry.empty())
+                return winners
             valid = (jnp.arange(n_bucket, dtype=jnp.int32)[None, :]
                      < lengths[:, None])
             keys = jax.random.split(key, b)
             est = medoid_centrality(backend, metric)
             order_fn = resolve_order_fn(backend)
 
-            def one(x: jnp.ndarray, v: jnp.ndarray,
-                    k: jax.Array) -> jnp.ndarray:
+            def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array):
                 # padded arms: ineligible to win (arm_mask) AND dropped from
                 # every reference draw / denominator (ref_mask) — one
                 # validity mask plays both roles.
                 problem = HalvingProblem(x, est, arm_mask=v, ref_mask=v)
-                return run_halving(problem, rounds, key=k,
-                                   survivor_order=order_fn).winner
+                out = run_halving(problem, rounds, key=k,
+                                  survivor_order=order_fn,
+                                  telemetry=telemetry)
+                return (out.winner, out.telemetry) if telemetry \
+                    else out.winner
 
             return jax.vmap(one)(data, valid, keys)
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("ragged", n_bucket, budget, metric, backend, eff_donate),
-                 build)
+    return _memo(("ragged", n_bucket, budget, metric, backend, eff_donate,
+                  telemetry), build)
 
 
 # --------------------------- persistent compile cache ------------------------

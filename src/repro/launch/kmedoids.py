@@ -7,7 +7,9 @@ against exact PAM (``--compare``; pull ratio is always reported — exact
 PAM's count is ``n^2`` by construction, no run needed). ``--serve`` routes
 the refinement sweeps through the continuous-batching
 :class:`repro.launch.serve_medoid.MedoidServer` instead of direct ragged
-dispatches, sharing buckets with any other medoid traffic.
+dispatches, sharing buckets with any other medoid traffic. ``--trace`` /
+``--metrics-out`` attach the observability layer (:mod:`repro.obs`):
+JSONL span/round/select events and a Prometheus text exposition.
 
 Example:
   PYTHONPATH=src python -m repro.launch.kmedoids --k 8 --n 4096 --d 128 \
@@ -16,6 +18,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -32,7 +35,8 @@ def run(n: int, d: int, k: int, dataset: str, *, metric: str = "",
         build_budget_per_arm: int = 16, swap_budget_per_arm: int = 16,
         refine_budget_per_arm: int = 20, refine_sweeps: int = 1,
         max_swap_rounds: int = 8, compare: bool = False,
-        serve: bool = False) -> dict:
+        serve: bool = False, trace=None,
+        metrics_path: str | None = None) -> dict:
     if dataset not in CLUSTER_DATASETS:
         raise ValueError(f"unknown dataset {dataset!r}; "
                          f"one of {sorted(CLUSTER_DATASETS)}")
@@ -48,20 +52,31 @@ def run(n: int, d: int, k: int, dataset: str, *, metric: str = "",
                          refine_sweeps=refine_sweeps,
                          max_swap_rounds=max_swap_rounds)
     t0 = time.time()
-    if serve:
-        from repro.cluster import kmedoids_via_service
-        res, srv = kmedoids_via_service(
-            data, k, jax.random.fold_in(key, 1), metric=cfg.metric,
-            backend=cfg.backend,
-            build_budget_per_arm=cfg.build_budget_per_arm,
-            swap_budget_per_arm=cfg.swap_budget_per_arm,
-            refine_budget_per_arm=cfg.refine_budget_per_arm,
-            refine_sweeps=cfg.refine_sweeps,
-            max_swap_rounds=cfg.max_swap_rounds)
-        serve_stats = srv.stats()
-    else:
-        res = kmedoids(data, k, jax.random.fold_in(key, 1), config=cfg)
-        serve_stats = None
+    span = (trace.span("kmedoids", n=n, k=k, mode="serve" if serve
+                       else "direct") if trace is not None
+            else contextlib.nullcontext())
+    srv = None
+    with span:
+        if serve:
+            from repro.cluster import kmedoids_via_service
+            from repro.launch.serve_medoid import MedoidServer
+            # trace-aware server: refinement dispatches emit round/select
+            # events (and run the telemetry program variant)
+            srv = MedoidServer(metric=cfg.metric, backend=cfg.backend,
+                               budget_per_arm=cfg.refine_budget_per_arm,
+                               trace=trace)
+            res, srv = kmedoids_via_service(
+                data, k, jax.random.fold_in(key, 1), server=srv,
+                metric=cfg.metric, backend=cfg.backend,
+                build_budget_per_arm=cfg.build_budget_per_arm,
+                swap_budget_per_arm=cfg.swap_budget_per_arm,
+                refine_budget_per_arm=cfg.refine_budget_per_arm,
+                refine_sweeps=cfg.refine_sweeps,
+                max_swap_rounds=cfg.max_swap_rounds)
+            serve_stats = srv.stats()
+        else:
+            res = kmedoids(data, k, jax.random.fold_in(key, 1), config=cfg)
+            serve_stats = None
     wall = time.time() - t0
 
     out = {
@@ -81,6 +96,13 @@ def run(n: int, d: int, k: int, dataset: str, *, metric: str = "",
     }
     if serve_stats is not None:
         out["serve"] = serve_stats
+    if metrics_path:
+        # --serve gets the per-bucket server metrics; the direct path still
+        # has the engine odometers to expose
+        from repro.obs import instrument_exposition
+        with open(metrics_path, "w") as fh:
+            fh.write(srv.exposition() if srv is not None
+                     else instrument_exposition())
     if compare:
         t0 = time.time()
         pam = pam_exact(data, k, metric)
@@ -119,19 +141,38 @@ def main(argv=None):
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent XLA compile cache directory (repeat "
                          "runs skip recompiling known program signatures)")
+    ap.add_argument("--trace", default=None, metavar="PATH", dest="trace_out",
+                    help="stream span/round/select events to this JSONL "
+                         "file (with --serve, refinement dispatches run "
+                         "with device-resident telemetry)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition on exit (the "
+                         "server's per-bucket metrics with --serve, the "
+                         "engine odometers otherwise)")
     args = ap.parse_args(argv)
     if args.compile_cache:
         from repro.engine.programs import enable_persistent_cache
         enable_persistent_cache(args.compile_cache)
-    print(json.dumps(run(
-        args.n, args.d, args.k, args.dataset, metric=args.metric,
-        backend=args.backend, seed=args.seed,
-        build_budget_per_arm=args.build_budget_per_arm,
-        swap_budget_per_arm=args.swap_budget_per_arm,
-        refine_budget_per_arm=args.refine_budget_per_arm,
-        refine_sweeps=args.refine_sweeps,
-        max_swap_rounds=args.max_swap_rounds,
-        compare=args.compare, serve=args.serve)))
+    session = None
+    if args.trace_out:
+        from repro.obs import TraceSession
+        session = TraceSession(args.trace_out, meta={
+            "workload": "kmedoids", "backend": args.backend,
+            "n": args.n, "k": args.k, "seed": args.seed})
+    try:
+        print(json.dumps(run(
+            args.n, args.d, args.k, args.dataset, metric=args.metric,
+            backend=args.backend, seed=args.seed,
+            build_budget_per_arm=args.build_budget_per_arm,
+            swap_budget_per_arm=args.swap_budget_per_arm,
+            refine_budget_per_arm=args.refine_budget_per_arm,
+            refine_sweeps=args.refine_sweeps,
+            max_swap_rounds=args.max_swap_rounds,
+            compare=args.compare, serve=args.serve, trace=session,
+            metrics_path=args.metrics_out)))
+    finally:
+        if session is not None:
+            session.close()
 
 
 if __name__ == "__main__":

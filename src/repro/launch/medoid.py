@@ -10,14 +10,23 @@ pallas_fused_topk); ``--batch B`` answers B independent queries in one
 dispatch via ``repro.api.find_medoids_batch``. All modes are thin wrappers
 over the :mod:`repro.api` facade.
 
+Observability (:mod:`repro.obs`): ``--trace PATH`` runs the query with
+device-resident round telemetry (bit-identical answers, same single
+dispatch) and streams span / round / select events to JSONL;
+``--metrics-out PATH`` writes the engine odometers as a Prometheus text
+exposition; ``--profile-dir DIR`` brackets the run in
+``jax.profiler.start_trace``/``stop_trace`` with the bandit phases
+annotated onto the profiler timeline.
+
 Example:
   PYTHONPATH=src python -m repro.launch.medoid --n 4096 --d 512 \
       --metric l1 --budget-per-arm 30 --dataset rnaseq20k_like \
-      --backend pallas_fused --batch 8
+      --backend pallas_fused --batch 8 --trace /tmp/medoid_trace.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
@@ -37,7 +46,7 @@ from repro.runtime.fault_tolerance import elastic_remesh
 def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
         *, seed: int = 0, use_kernel: bool = False, distributed: bool = False,
         compare: bool = False, ckpt_dir: str | None = None,
-        backend: str = "reference", batch: int = 0) -> dict:
+        backend: str = "reference", batch: int = 0, trace=None) -> dict:
     key = jax.random.key(seed)
     if use_kernel and backend == "reference":
         backend = "pallas_pairwise"   # legacy flag -> kernel-backed blocks
@@ -65,28 +74,51 @@ def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
 
     cfg_kw = dict(metric=metric, backend=backend,
                   budget_per_arm=budget_per_arm)
+    # --trace: switch the facade to the telemetry-carrying program variant
+    # (answers stay bit-identical; the distributed engine isn't instrumented)
+    with_tel = trace is not None and not (distributed
+                                          and len(jax.devices()) > 1)
+    dispatch_span = (trace.span("dispatch", mode=out.get("mode", backend))
+                     if trace is not None else contextlib.nullcontext())
     t0 = time.time()
-    if batch > 0:
-        # multi-query mode: B independent candidate sets, one dispatch
-        batch_data = jnp.stack([gen_data(jax.random.fold_in(key, 100 + b))
-                                for b in range(batch)])
-        medoids = find_medoids_batch(batch_data, jax.random.fold_in(key, 1),
-                                     **cfg_kw)
-        out["mode"] = f"batch x{batch} ({backend})"
-        out["medoids"] = [int(m) for m in medoids]
-        medoid = out["medoids"][0]
-        data = batch_data[0]
-    elif distributed and len(jax.devices()) > 1:
-        mesh = elastic_remesh(preferred_tp=1)
-        data_sh = jax.device_put(data, make_row_sharding(mesh))
-        medoid = find_medoid(data_sh, jax.random.fold_in(key, 1), mesh=mesh,
-                             distributed_impl="v2", **cfg_kw).medoid
-        out["mode"] = f"distributed-v2 x{len(jax.devices())} ({backend})"
-    else:
-        medoid = find_medoid(data, jax.random.fold_in(key, 1), **cfg_kw).medoid
-        out["mode"] = backend
+    with dispatch_span:
+        if batch > 0:
+            # multi-query mode: B independent candidate sets, one dispatch
+            batch_data = jnp.stack([gen_data(jax.random.fold_in(key, 100 + b))
+                                    for b in range(batch)])
+            res = find_medoids_batch(batch_data, jax.random.fold_in(key, 1),
+                                     telemetry=with_tel, **cfg_kw)
+            medoids, tel = res if with_tel else (res, None)
+            out["mode"] = f"batch x{batch} ({backend})"
+            out["medoids"] = [int(m) for m in medoids]
+            medoid = out["medoids"][0]
+            data = batch_data[0]
+            if trace is not None and tel is not None:
+                for slot, m in enumerate(out["medoids"]):
+                    trace.record_rounds(tel, slot=slot, slot_id=slot)
+                    trace.event("select", winner=m,
+                                pulls=int(tel["pulls"][slot].sum()), n=n,
+                                algo="corr_sh", metric=metric,
+                                backend=backend, slot_id=slot)
+        elif distributed and len(jax.devices()) > 1:
+            mesh = elastic_remesh(preferred_tp=1)
+            data_sh = jax.device_put(data, make_row_sharding(mesh))
+            medoid = find_medoid(data_sh, jax.random.fold_in(key, 1),
+                                 mesh=mesh, distributed_impl="v2",
+                                 **cfg_kw).medoid
+            out["mode"] = f"distributed-v2 x{len(jax.devices())} ({backend})"
+        else:
+            res = find_medoid(data, jax.random.fold_in(key, 1),
+                              telemetry=with_tel, **cfg_kw)
+            medoid = res.medoid
+            out["mode"] = backend
+            if trace is not None:
+                trace.record_result(res)
     out["medoid"] = medoid
     out["corrsh_s"] = round(time.time() - t0, 3)
+    if with_tel and batch == 0:
+        out["telemetry"] = {k: v.tolist()
+                            for k, v in (res.telemetry or {}).items()}
 
     if ckpt_dir:
         ckpt.save(ckpt_dir, 0, {"medoid": jnp.asarray(medoid)},
@@ -126,16 +158,45 @@ def main(argv=None):
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent XLA compile cache directory (repeat "
                          "runs skip recompiling known program signatures)")
+    ap.add_argument("--trace", default=None, metavar="PATH", dest="trace_out",
+                    help="stream span/round/select events to this JSONL "
+                         "file (runs with device-resident telemetry; "
+                         "answers stay bit-identical)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the engine trace/dispatch odometers as a "
+                         "Prometheus text exposition on exit")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="bracket the run in jax.profiler.start_trace/"
+                         "stop_trace writing here (bandit phases annotated)")
     args = ap.parse_args(argv)
     if args.compile_cache:
         from repro.engine.programs import enable_persistent_cache
         enable_persistent_cache(args.compile_cache)
-    print(json.dumps(run(args.n, args.d, args.metric, args.budget_per_arm,
-                         args.dataset, seed=args.seed,
-                         use_kernel=args.use_kernel,
-                         distributed=args.distributed, compare=args.compare,
-                         ckpt_dir=args.ckpt_dir, backend=args.backend,
-                         batch=args.batch)))
+    session = None
+    if args.trace_out or args.profile_dir:
+        from repro.obs import TraceSession
+        session = TraceSession(args.trace_out,
+                               annotate=args.profile_dir is not None,
+                               profiler_dir=args.profile_dir,
+                               meta={"workload": "medoid",
+                                     "backend": args.backend, "n": args.n,
+                                     "d": args.d, "seed": args.seed})
+    try:
+        print(json.dumps(run(args.n, args.d, args.metric,
+                             args.budget_per_arm,
+                             args.dataset, seed=args.seed,
+                             use_kernel=args.use_kernel,
+                             distributed=args.distributed,
+                             compare=args.compare,
+                             ckpt_dir=args.ckpt_dir, backend=args.backend,
+                             batch=args.batch, trace=session)))
+    finally:
+        if session is not None:
+            session.close()
+        if args.metrics_out:
+            from repro.obs import instrument_exposition
+            with open(args.metrics_out, "w") as fh:
+                fh.write(instrument_exposition())
 
 
 if __name__ == "__main__":

@@ -18,9 +18,21 @@ arrives, and ``compile_cache_dir=`` (CLI ``--compile-cache``) points jax's
 persistent compilation cache at a directory so a *restarted* server never
 re-compiles a bucket it has ever seen.
 
+Observability (see :mod:`repro.obs`): every server carries a
+:class:`~repro.obs.metrics.ServerMetrics` bundle — per-bucket
+request/answer/pull counters plus queue-wait, batch-occupancy and
+compile-vs-steady dispatch-latency histograms — exposed as a JSON
+:meth:`MedoidServer.metrics` snapshot and a Prometheus text
+:meth:`MedoidServer.exposition` (CLI ``--metrics-out``). Passing a
+:class:`~repro.obs.trace.TraceSession` (CLI ``--trace``) additionally runs
+every dispatch with device-resident round telemetry and streams span /
+round / select events to JSONL — with per-round pull sums that reconcile
+exactly with the reported totals (``python -m repro.obs.validate`` checks).
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve_medoid --requests 24 \
-      --n-min 16 --n-max 700 --d 32 --backend pallas_fused
+      --n-min 16 --n-max 700 --d 32 --backend pallas_fused \
+      --trace /tmp/medoid_trace.jsonl --metrics-out /tmp/medoid_metrics.txt
 """
 from __future__ import annotations
 
@@ -34,11 +46,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import get_backend, list_backends, round_schedule, schedule_pulls
+from repro.core import get_backend, list_backends, round_schedule
 from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n, pack_queries
 from repro.core.corr_sh import ragged_compile_count, ragged_medoids
 from repro.core.distances import METRICS
-from repro.engine import programs
+from repro.engine import programs, stop_round
+from repro.obs import ServerMetrics, TraceSession, instrument_exposition, \
+    telemetry_to_host
 
 
 @dataclasses.dataclass
@@ -75,7 +89,8 @@ class MedoidServer:
     def __init__(self, *, metric: str = "l2", backend: str = "reference",
                  budget_per_arm: int = 24, max_batch: int = 8,
                  min_bucket: int = DEFAULT_MIN_BUCKET, seed: int = 0,
-                 compile_cache_dir: Optional[str] = None):
+                 compile_cache_dir: Optional[str] = None,
+                 trace: Optional[TraceSession] = None):
         if metric not in METRICS:
             raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
         get_backend(backend)      # fail at construction, not mid-dispatch
@@ -96,6 +111,13 @@ class MedoidServer:
         self._next_rid = 0
         self._key = jax.random.key(seed)
         self._recompiles = 0
+        # observability: metrics are always on (host-side counters cost
+        # nothing on the device path); a TraceSession additionally switches
+        # every dispatch to the telemetry-carrying program variant (same
+        # single dispatch, bit-identical answers) and streams span / round /
+        # select events to JSONL.
+        self.trace = trace
+        self._metrics = ServerMetrics()
 
     # ------------------------------- admission ----------------------------
     def submit(self, data: jnp.ndarray, rid: Optional[int] = None) -> int:
@@ -113,6 +135,8 @@ class MedoidServer:
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(MedoidRequest(rid=rid, data=data,
                                         submit_step=self._step))
+        self._metrics.record_submit(
+            self._bucket_label(*self._bucket_key(self.queue[-1])))
         return rid
 
     @property
@@ -138,11 +162,15 @@ class MedoidServer:
                 [jnp.zeros((1, int(d)), jnp.float32)],
                 min_bucket=n_bucket, pad_batch_to=self.max_batch)
             t0 = time.time()
-            ragged_medoids(data, lengths, jax.random.key(0),
-                           budget=self.budget_per_arm * n_bucket,
-                           metric=self.metric, backend=self.backend,
-                           min_bucket=self.min_bucket,
-                           donate=True).block_until_ready()
+            # warmup must request telemetry exactly like live dispatches will
+            # (the telemetry variant is its own cached program — warming the
+            # wrong one would leave the first real step() compiling)
+            jax.block_until_ready(ragged_medoids(
+                data, lengths, jax.random.key(0),
+                budget=self.budget_per_arm * n_bucket,
+                metric=self.metric, backend=self.backend,
+                min_bucket=self.min_bucket, donate=True,
+                telemetry=self.trace is not None))
             timings["buckets"][f"{n_bucket}x{int(d)}"] = round(
                 time.time() - t0, 4)
         timings["traces"] = ragged_compile_count() - compiles0
@@ -152,6 +180,10 @@ class MedoidServer:
     # ------------------------------ scheduling ----------------------------
     def _bucket_key(self, req: MedoidRequest) -> tuple[int, int]:
         return (bucket_n(req.n, self.min_bucket), int(req.data.shape[1]))
+
+    @staticmethod
+    def _bucket_label(n_bucket: int, d: int) -> str:
+        return f"{n_bucket}x{d}"
 
     def step(self) -> list[MedoidRequest]:
         """Service the oldest bucket group; returns the answered requests."""
@@ -177,15 +209,18 @@ class MedoidServer:
         budget = self.budget_per_arm * n_bucket
         self._key, sub = jax.random.split(self._key)
 
+        label = self._bucket_label(*bkey)
+        with_tel = self.trace is not None
         compiles0 = ragged_compile_count()
         t0 = time.time()
         try:
             # donate=True: the packed batch buffer is server-owned and dead
             # after this dispatch — the engine may reuse its memory
-            medoids = ragged_medoids(
+            out = ragged_medoids(
                 data, lengths, sub, budget=budget, metric=self.metric,
                 backend=self.backend, min_bucket=self.min_bucket,
-                donate=True)
+                donate=True, telemetry=with_tel)
+            medoids, tel = out if with_tel else (out, None)
             medoids = [int(m) for m in medoids]      # block until ready
         except Exception:
             # dispatch failed: requests go back to the head of the queue so
@@ -193,9 +228,14 @@ class MedoidServer:
             self.queue = batch + self.queue
             raise
         wall = time.time() - t0
-        self._recompiles += ragged_compile_count() - compiles0
+        traced = ragged_compile_count() - compiles0
+        self._recompiles += traced
 
-        pulls = schedule_pulls(n_bucket, budget)
+        # executed-round accounting (matches the facade and the telemetry
+        # rows; identical to schedule_pulls whenever the schedule ends at
+        # its output round, which round_schedule guarantees)
+        rounds = round_schedule(n_bucket, budget)
+        pulls = sum(r.pulls for r in rounds[: stop_round(rounds) + 1])
         self.dispatches += 1
         self.buckets_seen.add(bkey)
         for slot, q in enumerate(batch):
@@ -204,6 +244,24 @@ class MedoidServer:
             q.batch_wall_s = round(wall, 4)
             q.pulls = pulls
             self.done[q.rid] = q
+        self._metrics.record_dispatch(
+            label, wall_s=wall, batch=len(batch), slots=self.max_batch,
+            pulls_per_request=pulls, waits=[q.wait_steps for q in batch],
+            compiled=traced > 0)
+        if self.trace is not None:
+            self.trace.event("span", name="dispatch", dur_s=round(wall, 6),
+                             traces={"ragged": traced} if traced else {},
+                             dispatches={"ragged": 1}, bucket=label,
+                             batch=len(batch), step=self._step)
+            tel_host = telemetry_to_host(tel)
+            for slot, q in enumerate(batch):
+                # per-request rows: batched queries share the schedule
+                # columns but each slot's alive/theta/gap are its own
+                self.trace.record_rounds(tel_host, slot=slot, rid=q.rid,
+                                         bucket=label)
+                self.trace.event("select", winner=q.medoid, pulls=q.pulls,
+                                 n=q.n, rid=q.rid, bucket=label,
+                                 wait_steps=q.wait_steps)
         return batch
 
     def drain(self) -> dict[int, MedoidRequest]:
@@ -234,6 +292,17 @@ class MedoidServer:
             "backend": self.backend,
             "metric": self.metric,
         }
+
+    def metrics(self) -> dict:
+        """JSON-able snapshot of the per-bucket serving metrics (counters:
+        value per label set; histograms: bucket counts + sum + count)."""
+        return self._metrics.snapshot()
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of the serving metrics, with the
+        engine-wide trace/dispatch odometers appended — one artifact shows
+        both per-bucket serving behavior and compile-vs-steady traffic."""
+        return self._metrics.exposition() + instrument_exposition()
 
 
 def synthetic_trace(num: int, n_lo: int, n_hi: int, d: int,
@@ -271,14 +340,25 @@ def main(argv=None):
     ap.add_argument("--warmup", action="store_true",
                     help="pre-trace every bucket the synthetic trace will "
                          "hit before admitting any request")
+    ap.add_argument("--trace", default=None, metavar="PATH", dest="trace_out",
+                    help="stream span/round/select events to this JSONL file "
+                         "(dispatches run with device-resident telemetry; "
+                         "answers stay bit-identical)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "serving metrics here on exit")
     args = ap.parse_args(argv)
     if args.arrivals_per_step < 1:
         ap.error("--arrivals-per-step must be >= 1")
 
+    session = TraceSession(args.trace_out, meta={
+        "workload": "serve_medoid", "backend": args.backend,
+        "metric": args.metric}) if args.trace_out else None
     srv = MedoidServer(metric=args.metric, backend=args.backend,
                        budget_per_arm=args.budget_per_arm,
                        max_batch=args.max_batch, seed=args.seed,
-                       compile_cache_dir=args.compile_cache)
+                       compile_cache_dir=args.compile_cache,
+                       trace=session)
     trace = synthetic_trace(args.requests, args.n_min, args.n_max, args.d,
                             seed=args.seed)
     warmup_stats = None
@@ -304,6 +384,11 @@ def main(argv=None):
         str(nb): [(r.survivors, r.num_refs)
                   for r in round_schedule(nb, args.budget_per_arm * nb)]
         for (nb, _) in sorted(srv.buckets_seen)}
+    if session is not None:
+        session.close()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(srv.exposition())
     print(json.dumps(out))
 
 

@@ -10,9 +10,10 @@ The PR-6 contract under test:
   donating and plain callers share one compiled program; the facade's
   self-packed (donated) ragged path answers identically to the caller-packed
   (non-donated) path;
-* **no host syncs in the hot path** — the engine package and the cluster
-  BUILD/SWAP phase kernels contain no ``.item()`` / ``np.asarray`` /
-  ``device_get`` (source-level guard, mirrored by the CI grep);
+* **no host syncs in the hot path** — the engine package, the device-path
+  telemetry module (``repro.obs.telemetry``) and the cluster BUILD/SWAP
+  phase kernels contain no ``.item()`` / ``np.asarray`` / ``device_get``
+  (source-level guard, mirrored by the CI grep);
 * **stacked schedules** — ``Schedule.stacked`` partitions exactly the
   scanned prefix ``[0, r_stop)`` into bands with the legacy entering sizes;
 * **warmup + persistent cache** — a warmed ``MedoidServer`` serves known
@@ -46,37 +47,39 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 def test_find_medoid_traces_exactly_once():
     data = jax.random.normal(jax.random.key(0), (37, 5))
     kw = dict(budget_per_arm=23, metric="l2", backend="reference")
-    t0, d0 = instrument.trace_count("medoid"), instrument.dispatch_count("medoid")
-    a = find_medoid(data, jax.random.key(1), **kw).medoid
-    traced = instrument.trace_count("medoid") - t0
-    assert traced <= 1          # 0 only if an identical config ran earlier
-    for i in range(3):          # same shape+config: never again
-        b = find_medoid(data, jax.random.key(1), **kw).medoid
-        assert b == a
-    assert instrument.trace_count("medoid") - t0 == traced
-    assert instrument.dispatch_count("medoid") - d0 == 4
+    with instrument.deltas() as first:
+        a = find_medoid(data, jax.random.key(1), **kw).medoid
+    assert first.trace("medoid") <= 1  # 0 only if identical config ran earlier
+    assert first.dispatch("medoid") == 1
+    with instrument.deltas() as rerun:
+        for i in range(3):          # same shape+config: never again
+            b = find_medoid(data, jax.random.key(1), **kw).medoid
+            assert b == a
+    assert rerun.trace("medoid") == 0
+    assert rerun.dispatch("medoid") == 3
 
 
 def test_ragged_traces_once_per_bucket():
     qs = [jax.random.normal(jax.random.fold_in(jax.random.key(2), i), (n, 4))
           for i, n in enumerate((11, 29, 43))]   # all bucket to 64
-    t0 = instrument.trace_count("ragged")
-    a = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
-    traced = instrument.trace_count("ragged") - t0
-    assert traced <= 1
-    b = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
+    with instrument.deltas() as first:
+        a = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
+    assert first.trace("ragged") <= 1
+    with instrument.deltas() as rerun:
+        b = find_medoids_ragged(qs, key=jax.random.key(3), budget_per_arm=19)
     assert [int(x) for x in a] == [int(x) for x in b]
-    assert instrument.trace_count("ragged") - t0 == traced
+    assert rerun.trace("ragged") == 0
 
 
 def test_kmedoids_identical_rerun_traces_nothing():
     data = jax.random.normal(jax.random.key(4), (40, 6))
     res = kmedoids(data, 3, jax.random.key(5), build_budget_per_arm=13,
                    swap_budget_per_arm=13, refine_budget_per_arm=13)
-    t0 = instrument.trace_count()
-    res2 = kmedoids(data, 3, jax.random.key(5), build_budget_per_arm=13,
-                    swap_budget_per_arm=13, refine_budget_per_arm=13)
-    assert instrument.trace_count() - t0 == 0     # every program is cached
+    with instrument.deltas() as d:
+        res2 = kmedoids(data, 3, jax.random.key(5), build_budget_per_arm=13,
+                        swap_budget_per_arm=13, refine_budget_per_arm=13)
+    assert d.trace() == 0                         # every program is cached
+    assert d.counters()["traces"] == {}           # per-kind deltas agree
     assert (res2.medoids, res2.pulls, res2.swaps) == \
         (res.medoids, res.pulls, res.swaps)
 
@@ -119,8 +122,13 @@ def test_no_host_syncs_in_engine_package():
     import repro.engine.halving
     import repro.engine.programs
     import repro.engine.schedule
+    import repro.obs.telemetry
+    # repro.obs.telemetry is device-path: its stats ride the scanned round
+    # loop, so it lives under the same guard as the engine package (the
+    # host-side obs modules — trace/metrics — legitimately sync)
     for mod in (repro.engine.halving, repro.engine.estimators,
-                repro.engine.programs, repro.engine.schedule):
+                repro.engine.programs, repro.engine.schedule,
+                repro.obs.telemetry):
         src = inspect.getsource(mod)
         for pat in FORBIDDEN:
             assert not re.search(pat, src), f"{pat!r} found in {mod.__name__}"
