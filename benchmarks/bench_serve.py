@@ -1,0 +1,176 @@
+"""Live-corpus serving: maintenance pull ratio + EDF-vs-FIFO latency.
+
+Two cells, mirroring the acceptance properties of ``repro.serve``:
+
+* **maintenance ratio** — a seeded insert/delete stream through
+  :class:`repro.serve.maintain.MaintainedMedoid` with an exact-regime
+  budget, against the counterfactual of answering every mutation with a
+  full correlated-SH re-run. The incremental protocol's whole point is
+  that most mutations keep the incumbent for one O(n) n-vector; the
+  ``pull_savings`` column is the measured ratio (counterfactual pulls /
+  actual pulls) and ``kept_frac`` the fraction of mutations that never
+  re-ran. The counterfactual is computed exactly from the round schedule
+  at each mutation's capacity bucket — no second run needed.
+
+* **EDF vs FIFO** — the same open-loop burst (mixed buckets, the last
+  third carrying tight absolute deadlines) replayed against a FIFO server
+  and an EDF server. Reported per policy: p50/p99 answer latency, the
+  deadline hit rate over the deadlined third, and how many requests the
+  policy shed as infeasible. Deadlines are sized from ONE measured warm
+  dispatch (``4x`` its wall), so under FIFO the late-submitted deadlined
+  requests sit behind the backlog and miss, while EDF reorders them to
+  the front — the gap between the two hit rates is the cell's payload.
+  Wall-clock numbers are machine-dependent; the hit-rate gap is the
+  stable signal.
+
+``python benchmarks/run.py --only serve`` writes ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import bucket_n
+from repro.engine import round_schedule, stop_round
+from repro.launch.serve_medoid import MedoidServer
+from repro.serve.corpus import CorpusStore
+from repro.serve.maintain import MaintainedMedoid
+
+
+def _rerun_pulls(n_bucket: int, budget_per_arm: int) -> int:
+    """Scheduled pulls of one full re-run at this bucket (the exact number
+    ``MaintainedMedoid._rerun`` charges — executed rounds only)."""
+    rounds = round_schedule(n_bucket, budget_per_arm * n_bucket)
+    return sum(r.pulls for r in rounds[: stop_round(rounds) + 1]) \
+        if rounds else 0
+
+
+def _maintenance_cell(n0: int, d: int, steps: int, seed: int,
+                      backend: str) -> list[dict]:
+    rng = np.random.default_rng(seed + 1)
+    store = CorpusStore.from_points(
+        rng.normal(size=(n0, d)).astype(np.float32), backend=backend)
+    b = bucket_n(store.capacity, store.min_bucket)
+    budget = b * max(1, math.ceil(math.log2(b)))    # exact regime
+    mm = MaintainedMedoid(store, budget_per_arm=budget, seed=seed)
+
+    # counterfactual accumulator: what "re-run on every mutation" would
+    # cost, priced at each mutation's ACTUAL corpus size (n drifts over the
+    # stream, so the per-step bucket must be read off as it happens)
+    counterfactual = mm.rerun_pulls          # both pay the adoption re-run
+    t0 = time.time()
+    for _ in range(steps):
+        if store.n == 0 or rng.random() < 0.5:
+            mm.insert(rng.normal(size=d).astype(np.float32))
+        else:
+            mm.delete(int(rng.choice(store.live_slots())))
+        mm.query()
+        counterfactual += store.capacity + _rerun_pulls(
+            bucket_n(max(1, store.n), store.min_bucket), mm.budget_per_arm)
+    wall = time.time() - t0
+    out = mm.stats()
+    savings = counterfactual / out["total_pulls"]
+    return [{
+        "name": f"maintain_stream_{backend}_n{n0}x{steps}",
+        "us_per_call": round(wall / steps * 1e6, 1),
+        "pulls": out["total_pulls"],
+        "derived": (f"kept_frac={out['kept_frac']:.3f} "
+                    f"reruns={out['reruns']} "
+                    f"incremental_pulls={out['incremental_pulls']} "
+                    f"rerun_pulls={out['rerun_pulls']} "
+                    f"pull_savings={savings:.2f}x"),
+    }, {
+        "name": f"maintain_counterfactual_rerun_every_n{n0}x{steps}",
+        "us_per_call": "",
+        "pulls": counterfactual,
+        "derived": f"full re-run after each of {steps} mutations (computed)",
+    }]
+
+
+def _burst(server: MedoidServer, rng: np.random.Generator, *,
+           num: int, sizes: tuple[int, ...], d: int,
+           deadline_s: float) -> tuple[list[int], list[int]]:
+    """Submit an open-loop burst; the last third carries ``deadline_s``
+    (absolute). Returns (all rids, deadlined rids)."""
+    rids, deadlined = [], []
+    cut = num - num // 3
+    for i in range(num):
+        data = jnp.asarray(rng.normal(size=(sizes[i % len(sizes)], d)),
+                           jnp.float32)
+        if i >= cut:
+            rid = server.submit(data, priority=1, deadline_s=deadline_s)
+            deadlined.append(rid)
+        else:
+            rid = server.submit(data)
+        rids.append(rid)
+    return rids, deadlined
+
+
+def _serving_cell(policy: str, *, num: int, sizes: tuple[int, ...], d: int,
+                  budget_per_arm: int, max_batch: int, seed: int,
+                  backend: str, unit_s: float) -> dict:
+    rng = np.random.default_rng(seed)
+    srv = MedoidServer(backend=backend, budget_per_arm=budget_per_arm,
+                       max_batch=max_batch, policy=policy, seed=seed,
+                       collect_gaps=False)
+    srv.warmup([(n, d) for n in sizes])
+    # one metered throwaway step: a fresh server's first live dispatch pays
+    # host-side setup the open-loop measurement should not see
+    srv.submit(jnp.asarray(rng.normal(size=(sizes[-1], d)), jnp.float32))
+    srv.step()
+    t0 = srv.now()
+    rids, deadlined = _burst(srv, rng, num=num, sizes=sizes, d=d,
+                             deadline_s=t0 + 4.0 * unit_s)
+    steps = 0
+    while srv.pending:
+        srv.step()
+        steps += 1
+    lat = np.asarray([srv.done[r].finish_s - srv.done[r].submit_s
+                      for r in rids if r in srv.done])
+    hit = sum(1 for r in deadlined
+              if r in srv.done and srv.done[r].deadline_met)
+    s = srv.stats()
+    return {
+        "name": f"serve_{policy}_{backend}_x{num}",
+        "us_per_call": round(float(np.percentile(lat, 50)) * 1e6, 1),
+        "derived": (f"p50_us={np.percentile(lat, 50) * 1e6:.0f} "
+                    f"p99_us={np.percentile(lat, 99) * 1e6:.0f} "
+                    f"deadline_hit_rate={hit / len(deadlined):.2f} "
+                    f"shed={s['shed']} dispatches={steps}"),
+    }
+
+
+def run(n0: int = 48, d: int = 16, steps: int = 120, num: int = 16,
+        sizes: tuple[int, ...] = (40, 100), budget_per_arm: int = 8,
+        max_batch: int = 2, backend: str = "reference",
+        seed: int = 0) -> list[dict]:
+    rows = _maintenance_cell(n0, d, steps, seed, backend)
+
+    # size deadlines off one measured warm dispatch (compile excluded)
+    probe = MedoidServer(backend=backend, budget_per_arm=budget_per_arm,
+                         max_batch=max_batch, seed=seed, collect_gaps=False)
+    probe.warmup([(n, d) for n in sizes])
+    rng = np.random.default_rng(seed)
+    # time the SECOND probe dispatch: the first pays one-time host-side
+    # setup a steady serving loop never sees again
+    for _ in range(2):
+        probe.submit(jnp.asarray(rng.normal(size=(sizes[-1], d)),
+                                 jnp.float32))
+        t0 = time.time()
+        probe.step()
+        unit_s = max(time.time() - t0, 1e-4)
+
+    for policy in ("fifo", "edf"):
+        rows.append(_serving_cell(
+            policy, num=num, sizes=sizes, d=d,
+            budget_per_arm=budget_per_arm, max_batch=max_batch, seed=seed,
+            backend=backend, unit_s=unit_s))
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -58,7 +58,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "algorithms", "curves", "correlation",
                              "kernels", "backends", "ragged", "cluster",
-                             "engine", "roofline"])
+                             "engine", "serve", "roofline"])
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_<section>.json files are written")
     args = ap.parse_args()
@@ -67,7 +67,7 @@ def main() -> None:
     from benchmarks import (bench_algorithms, bench_backends, bench_cluster,
                             bench_correlation, bench_engine,
                             bench_error_curves, bench_kernels, bench_ragged,
-                            roofline_table)
+                            bench_serve, roofline_table)
 
     sections = {
         "algorithms": lambda: bench_algorithms.run(
@@ -84,6 +84,7 @@ def main() -> None:
         "cluster": lambda: bench_cluster.run(
             n_small=512, n_big=4096, d=64 * scale),
         "engine": lambda: bench_engine.run(d=16 * scale),
+        "serve": lambda: bench_serve.run(steps=120 * scale),
         "roofline": lambda: roofline_table.run(
             ("results_dryrun_16x16.jsonl", "results_dryrun_2x16x16.jsonl")),
     }

@@ -13,6 +13,8 @@ clustering — enters through the four functions here:
     meds = find_medoids_batch(batch, key)                 # (B,) indices
     meds = find_medoids_ragged([q1, q2, q3], key=key)     # any sizes
     clust = kmedoids(data, k=8, key=key)                  # KMedoidsResult
+    live = maintain_medoid(data)                          # MaintainedMedoid
+    live.insert(x); live.delete(slot); live.query()       # mutable corpus
 
 Configuration is a frozen dataclass (:class:`MedoidConfig` /
 :class:`KMedoidsConfig`); every entry point also accepts the config fields
@@ -50,6 +52,7 @@ ALGOS = ("corr_sh", "meddit", "rand", "exact")
 __all__ = [
     "ALGOS", "KMedoidsConfig", "MedoidConfig", "MedoidResult", "find_medoid",
     "find_medoids_batch", "find_medoids_ragged", "kmedoids",
+    "maintain_medoid",
 ]
 
 
@@ -275,6 +278,43 @@ def find_medoids_ragged(data, lengths=None,
         medoids, tel = out
         return medoids, telemetry_to_host(tel)
     return out
+
+
+# ------------------------------ mutable corpus ------------------------------
+
+def maintain_medoid(data=None, *, d: Optional[int] = None,
+                    config: Optional[MedoidConfig] = None, **overrides):
+    """Build a live, incrementally-maintained medoid over a mutable corpus.
+
+    Returns a :class:`repro.serve.MaintainedMedoid`: ``insert(x)`` /
+    ``delete(slot)`` mutate the corpus at O(n) distance evaluations each
+    (one exact n-vector updates every live point's centrality), ``query()``
+    serves the maintained answer for the current corpus version for free,
+    and only a dethroned (or deleted) incumbent triggers a full
+    correlated-SH re-run — dispatched through the same cached programs as
+    :func:`find_medoids_ragged`, keyed by corpus version for bit-exact
+    reproducibility. Pass ``data (n, d)`` to bootstrap from an existing
+    corpus, or ``d=`` alone to start empty. Config fields (``metric``,
+    ``backend``, ``budget_per_arm``, ``min_bucket``, ``seed``) mean what
+    they mean everywhere else in this facade.
+    """
+    from repro.serve import CorpusStore, MaintainedMedoid
+
+    cfg = _resolve(config, overrides, MedoidConfig)
+    if cfg.algo != "corr_sh":
+        raise ValueError(f"maintain_medoid requires algo='corr_sh', "
+                         f"got {cfg.algo!r}")
+    if data is not None:
+        store = CorpusStore.from_points(jnp.asarray(data), metric=cfg.metric,
+                                        backend=cfg.backend,
+                                        min_bucket=cfg.min_bucket)
+    elif d is not None:
+        store = CorpusStore(d, metric=cfg.metric, backend=cfg.backend,
+                            min_bucket=cfg.min_bucket)
+    else:
+        raise ValueError("pass data (n, d) or d= to start an empty corpus")
+    return MaintainedMedoid(store, budget_per_arm=cfg.budget_per_arm,
+                            seed=cfg.seed)
 
 
 # -------------------------------- clustering --------------------------------

@@ -56,7 +56,7 @@ import numpy as np
 
 from repro.core import (get_backend, plan_buckets, pack_queries,
                         round_schedule, schedule_pulls)
-from repro.core.bucketing import DEFAULT_MIN_BUCKET, next_pow2
+from repro.core.bucketing import DEFAULT_MIN_BUCKET, bucket_n, next_pow2
 from repro.core.corr_sh import _medoid_impl, ragged_medoids
 from repro.deprecation import warn_once
 from repro.engine import (HalvingProblem, build_delta, run_halving,
@@ -157,6 +157,39 @@ def _top2_of(dmat: jnp.ndarray):
 
 
 _top2 = jax.jit(_top2_of)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def _assign_points(points: jnp.ndarray, med_rows: jnp.ndarray, *,
+                   metric: str, backend: str):
+    """Nearest medoid per row of ``points (m, k-free)``: ``(labels (m,),
+    d1 (m,))`` against the medoid rows ``(k, d)``."""
+    pw = get_backend(backend).pairwise(metric)
+    dmat = pw(points, med_rows)                               # (m, k)
+    return jnp.argmin(dmat, axis=1).astype(jnp.int32), jnp.min(dmat, axis=1)
+
+
+def assign_to_medoids(points, med_rows, *, metric: str = "l2",
+                      backend: str = "reference",
+                      min_bucket: int = DEFAULT_MIN_BUCKET):
+    """Assign arriving points to their nearest medoid, padded to a
+    power-of-two arrival bucket so any arrival-size stream reuses one
+    compiled program per ``(m_bucket, k, d)`` signature (the streaming
+    analogue of the serving layer's shape buckets). Returns
+    ``(labels (m,) np.int32, d1 (m,) np.float32, pulls)`` — pulls charge
+    the padded rows too (they ran)."""
+    points = jnp.asarray(points, jnp.float32)
+    med_rows = jnp.asarray(med_rows, jnp.float32)
+    if points.ndim != 2 or med_rows.ndim != 2:
+        raise ValueError(f"expected (m, d) points and (k, d) medoid rows, "
+                         f"got {points.shape} and {med_rows.shape}")
+    m = int(points.shape[0])
+    mb = bucket_n(max(1, m), min_bucket)
+    padded = jnp.zeros((mb, points.shape[1]), jnp.float32).at[:m].set(points)
+    labels, d1 = _assign_points(padded, med_rows, metric=metric,
+                                backend=backend)
+    return (np.asarray(labels[:m]), np.asarray(d1[:m]),
+            mb * int(med_rows.shape[0]))
 
 
 @functools.partial(jax.jit,

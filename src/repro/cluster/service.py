@@ -10,19 +10,31 @@ guarantees with every other tenant's medoid traffic (and its per-request
 accounting: the pulls reported are the server's scheduled pulls).
 
 :class:`ClusterService` is the observability facade over a live server: a
-tiny route table (``/stats``, ``/metrics``, ``/buckets``) serving the
-scheduler accounting, the JSON metrics snapshot, and the Prometheus text
+tiny route table (``/stats``, ``/metrics``, ``/buckets``, and ``/stream``
+when a :class:`ClusterStream` is attached) serving the scheduler
+accounting, the JSON metrics snapshot, and the Prometheus text
 exposition — the same payloads an HTTP front-end would mount, minus the
 HTTP (the container ships no web stack, and the tests exercise the routes
 directly).
+
+:class:`ClusterStream` is the streaming maintenance layer: fit once with
+the full BUILD/refine/SWAP pipeline, then ``add(points)`` assigns arrivals
+to their nearest medoid through a padded jitted program
+(:func:`repro.cluster.kmedoids.assign_to_medoids` — one compiled program
+per arrival bucket) and re-refines ONLY the clusters that received points
+(one bounded ragged sweep through the same refiner hook the fit used),
+instead of re-clustering from scratch.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
+import numpy as np
 
-from repro.cluster.kmedoids import KMedoidsResult, _kmedoids_impl
+from repro.cluster.kmedoids import (KMedoidsResult, _kmedoids_impl,
+                                    assign_to_medoids, make_direct_refiner)
+from repro.core.bucketing import DEFAULT_MIN_BUCKET
 
 
 class ServiceRefiner:
@@ -42,22 +54,174 @@ class ServiceRefiner:
                 sum(r.pulls for r in answered))
 
 
+class ClusterStream:
+    """Streaming cluster maintenance over a fitted k-medoids model.
+
+    The constructor runs the full pipeline once (identical to
+    :func:`repro.api.kmedoids` — same key policy, same result). Each
+    :meth:`add` then:
+
+    1. assigns the arriving points to their nearest current medoid
+       (padded jitted program; one compilation per arrival bucket);
+    2. re-refines ONLY the affected clusters — the ones that received
+       points — with one bounded ragged sweep through the refiner hook
+       (direct bucketed dispatches by default; pass
+       ``refiner=ServiceRefiner(server)`` to ride a live MedoidServer);
+    3. re-assigns the members of those clusters against the updated
+       medoids (other clusters are untouched — bounded maintenance, not a
+       global re-fit; :meth:`refit` re-runs the full pipeline when drift
+       accumulates).
+
+    Medoids are stable indices into the growing point store, and every
+    distance evaluation is accounted in :attr:`assign_pulls` /
+    :attr:`refine_pulls` on top of the initial fit's.
+    """
+
+    def __init__(self, data, k: int, key: jax.Array, *,
+                 metric: str = "l2", backend: str = "reference",
+                 refine_budget_per_arm: int = 20,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 refiner=None, **kwargs):
+        self.metric = metric
+        self.backend = backend
+        self.min_bucket = min_bucket
+        self.k = k
+        self._key = key
+        self._refiner = refiner if refiner is not None else \
+            make_direct_refiner(metric=metric, backend=backend,
+                                budget_per_arm=refine_budget_per_arm,
+                                min_bucket=min_bucket)
+        self.fit = _kmedoids_impl(
+            data, k, key, metric=metric, backend=backend,
+            refine_budget_per_arm=refine_budget_per_arm,
+            min_bucket=min_bucket, refiner=refiner, **kwargs)
+        self.data = np.asarray(data, np.float32).copy()
+        self.labels = self.fit.labels.copy()
+        self.medoids = list(self.fit.medoids)   # point indices, stable
+        self.arrivals = 0
+        self.batches = 0
+        self.assign_pulls = 0
+        self.refine_pulls = 0
+        self.medoid_updates = 0
+
+    @property
+    def n(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def pulls(self) -> int:
+        """Total distance evaluations: initial fit + streaming maintenance."""
+        return self.fit.pulls + self.assign_pulls + self.refine_pulls
+
+    def add(self, points) -> dict:
+        """Ingest ``points (m, d)``; returns what the maintenance pass did:
+        ``{"assigned": (m,) labels, "affected": [cluster slots],
+        "medoid_updates": int, "pulls": int}``."""
+        points = np.asarray(points, np.float32)
+        if points.ndim != 2 or points.shape[1] != self.data.shape[1]:
+            raise ValueError(f"expected (m, {self.data.shape[1]}) points, "
+                             f"got shape {points.shape}")
+        pulls0 = self.assign_pulls + self.refine_pulls
+        labels_new, _, p = assign_to_medoids(
+            points, self.data[self.medoids], metric=self.metric,
+            backend=self.backend, min_bucket=self.min_bucket)
+        self.assign_pulls += p
+        self.data = np.concatenate([self.data, points])
+        self.labels = np.concatenate([self.labels, labels_new])
+        self.arrivals += int(points.shape[0])
+        self.batches += 1
+
+        affected = sorted(set(labels_new.tolist()))
+        members = [(c, np.flatnonzero(self.labels == c)) for c in affected]
+        members = [(c, mem) for c, mem in members if mem.size > 0]
+        updates = 0
+        if members:
+            key = jax.random.fold_in(self._key, 3 + self.batches)
+            locals_, p = self._refiner(
+                [self.data[mem] for _, mem in members], key)
+            self.refine_pulls += p
+            for (c, mem), loc in zip(members, locals_):
+                g = int(mem[int(loc)])
+                if g != self.medoids[c]:
+                    self.medoids[c] = g
+                    updates += 1
+            if updates:
+                # bounded re-assignment: only the affected clusters'
+                # members are re-priced against the updated medoids
+                mem_all = np.concatenate([mem for _, mem in members])
+                lab, _, p = assign_to_medoids(
+                    self.data[mem_all], self.data[self.medoids],
+                    metric=self.metric, backend=self.backend,
+                    min_bucket=self.min_bucket)
+                self.assign_pulls += p
+                self.labels[mem_all] = lab
+        self.medoid_updates += updates
+        return {"assigned": labels_new, "affected": affected,
+                "medoid_updates": updates,
+                "pulls": self.assign_pulls + self.refine_pulls - pulls0}
+
+    def refit(self, **kwargs) -> KMedoidsResult:
+        """Full re-clustering of the current store (fresh BUILD/refine/SWAP
+        under a fresh fold of the stream key) — the escape hatch when
+        bounded maintenance has drifted. Resets labels and medoids."""
+        # fold constant 2 is reserved for SWAP inside the fit; batches fold
+        # from 4 upward — 3 is the refit lane
+        self._key = jax.random.fold_in(self._key, 3)
+        self.fit = _kmedoids_impl(
+            self.data, self.k, self._key, metric=self.metric,
+            backend=self.backend, min_bucket=self.min_bucket,
+            refiner=self._refiner, **kwargs)
+        self.labels = self.fit.labels.copy()
+        self.medoids = list(self.fit.medoids)
+        return self.fit
+
+    def cost(self) -> float:
+        """Current summed distance to assigned medoids (host recompute —
+        an observability number, not on the serving path)."""
+        _, d1, _ = assign_to_medoids(
+            self.data, self.data[self.medoids], metric=self.metric,
+            backend=self.backend, min_bucket=self.min_bucket)
+        return float(d1.sum())
+
+    def stats(self) -> dict:
+        return {
+            "n": self.n, "k": self.k, "arrivals": self.arrivals,
+            "batches": self.batches, "medoids": list(self.medoids),
+            "medoid_updates": self.medoid_updates,
+            "fit_pulls": self.fit.pulls,
+            "assign_pulls": self.assign_pulls,
+            "refine_pulls": self.refine_pulls,
+            "total_pulls": self.pulls,
+        }
+
+
 class ClusterService:
     """Route-level view of a :class:`~repro.launch.serve_medoid.MedoidServer`
     (observability endpoints a front-end would mount verbatim)::
 
-        svc = ClusterService(server)
+        svc = ClusterService(server, stream=stream)
         svc.handle("/stats")     # scheduler accounting + metrics snapshot
         svc.handle("/metrics")   # Prometheus text exposition (str)
         svc.handle("/buckets")   # compiled-bucket inventory
+        svc.handle("/stream")    # streaming-maintenance accounting
 
     ``routes()`` lists the table; unknown paths raise ``KeyError`` (a 404).
+    The ``/stream`` route exists only when a :class:`ClusterStream` is
+    attached (at construction or via :meth:`attach_stream`).
     """
 
-    def __init__(self, server):
+    def __init__(self, server, stream: Optional[ClusterStream] = None):
         self.server = server
+        self.stream = None
         self._routes = {"/stats": self.stats, "/metrics": self.metrics,
                         "/buckets": self.buckets}
+        if stream is not None:
+            self.attach_stream(stream)
+
+    def attach_stream(self, stream: ClusterStream) -> None:
+        """Mount a live :class:`ClusterStream` under ``/stream``."""
+        self.stream = stream
+        self._routes["/stream"] = self.stream_stats
 
     def routes(self) -> tuple:
         return tuple(sorted(self._routes))
@@ -86,6 +250,12 @@ class ClusterService:
                                   for nb, d in self.server.buckets_seen),
                 "recompiles": self.server.recompiles,
                 "dispatches": self.server.dispatches}
+
+    def stream_stats(self) -> dict:
+        """The ``/stream`` payload: streaming-maintenance accounting."""
+        if self.stream is None:
+            raise KeyError("no ClusterStream attached")
+        return self.stream.stats()
 
 
 def kmedoids_via_service(data, k: int, key: jax.Array, *,

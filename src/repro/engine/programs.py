@@ -187,6 +187,131 @@ def ragged_program(*, n_bucket: int, budget: int, metric: str = "l2",
                   telemetry), build)
 
 
+# ------------------------------ corpus programs -----------------------------
+# Device-resident mutation kernels for the live corpus store
+# (:mod:`repro.serve.corpus`). All of them operate on the full power-of-two
+# *capacity* bucket — a slot freelist on the host decides which row a
+# mutation touches, but the compiled signature depends only on the bucket —
+# so an arbitrary insert/delete stream inside one capacity bucket reuses one
+# compiled program per mutation kind ("no retrace on mutate", asserted by
+# tests/test_serve.py against the "corpus" trace odometer). The centrality
+# vector ``cent`` holds the EXACT summed distance of every live slot to all
+# live slots (+inf at dead slots); each mutation maintains it with the one
+# n-vector of distances the incumbent re-verification needs anyway — the
+# same one-vector trick the SWAP phase uses before applying a swap.
+
+def _pairwise_of(backend: str, metric: str):
+    from repro.core.backend import get_backend
+
+    return get_backend(backend).pairwise(metric)
+
+
+def corpus_init_program(*, metric: str = "l2",
+                        backend: str = "reference") -> Callable:
+    """Jitted centrality bootstrap: ``(buf (cap, d), alive (cap,)) ->
+    (cent (cap,), winner)`` — the one O(cap^2) pass that seeds the exact
+    centrality vector when a store is built from an existing point set
+    (mutations after it are all O(cap))."""
+    def build():
+        def impl(buf: jnp.ndarray, alive: jnp.ndarray):
+            instrument.note_trace("corpus")
+            pw = _pairwise_of(backend, metric)
+            dmat = pw(buf, buf)                               # (cap, cap)
+            sums = jnp.sum(jnp.where(alive[None, :], dmat, 0.0), axis=1)
+            cent = jnp.where(alive, sums, jnp.inf)
+            return cent, jnp.argmin(cent).astype(jnp.int32)
+        return jax.jit(impl)
+
+    return _memo(("corpus_init", metric, backend), build)
+
+
+def corpus_insert_program(*, metric: str = "l2",
+                          backend: str = "reference") -> Callable:
+    """Jitted insert: ``(buf, cent, alive, x (d,), slot) -> (buf', cent',
+    alive', winner)``. One n-vector of distances prices the new point
+    exactly AND updates every live slot's exact centrality (``cent[j] +=
+    d(x, j)``); ``winner`` is the exact argmin after the mutation, so the
+    caller can tell a kept incumbent from a dethroned one without any
+    further device work. The store's buffers are donated (folded away on
+    CPU)."""
+    eff_donate = donation_enabled()
+
+    def build():
+        def impl(buf: jnp.ndarray, cent: jnp.ndarray, alive: jnp.ndarray,
+                 x: jnp.ndarray, slot: jnp.ndarray):
+            instrument.note_trace("corpus")
+            pw = _pairwise_of(backend, metric)
+            buf = buf.at[slot].set(x)
+            row = pw(x[None, :], buf)[0]                      # (cap,)
+            cent_x = jnp.sum(jnp.where(alive, row, 0.0))
+            cent = jnp.where(alive, cent + row, jnp.inf).at[slot].set(cent_x)
+            alive = alive.at[slot].set(True)
+            winner = jnp.argmin(cent).astype(jnp.int32)
+            return buf, cent, alive, winner
+        return jax.jit(impl,
+                       donate_argnums=(0, 1, 2) if eff_donate else ())
+
+    return _memo(("corpus_insert", metric, backend, eff_donate), build)
+
+
+def corpus_delete_program(*, metric: str = "l2",
+                          backend: str = "reference") -> Callable:
+    """Jitted delete: ``(buf, cent, alive, slot) -> (cent', alive',
+    winner)``. The deleted slot's one n-vector of distances backs its
+    contribution out of every surviving centrality; the point data stays in
+    the (now dead, freelisted) row and is simply masked everywhere."""
+    eff_donate = donation_enabled()
+
+    def build():
+        def impl(buf: jnp.ndarray, cent: jnp.ndarray, alive: jnp.ndarray,
+                 slot: jnp.ndarray):
+            instrument.note_trace("corpus")
+            pw = _pairwise_of(backend, metric)
+            row = pw(buf[slot][None, :], buf)[0]              # (cap,)
+            alive = alive.at[slot].set(False)
+            cent = jnp.where(alive, cent - row, jnp.inf)
+            winner = jnp.argmin(cent).astype(jnp.int32)
+            return cent, alive, winner
+        return jax.jit(impl, donate_argnums=(1, 2) if eff_donate else ())
+
+    return _memo(("corpus_delete", metric, backend, eff_donate), build)
+
+
+def corpus_grow_program() -> Callable:
+    """Jitted capacity doubling: ``(buf (cap, d), cent, alive) -> the same
+    triple at 2*cap``. The old buffers are donated — freed as soon as the
+    copy lands — and the new tail starts dead (+inf centrality, freelisted
+    by the host store)."""
+    eff_donate = donation_enabled()
+
+    def build():
+        def impl(buf: jnp.ndarray, cent: jnp.ndarray, alive: jnp.ndarray):
+            instrument.note_trace("corpus")
+            cap = buf.shape[0]
+            return (jnp.pad(buf, ((0, cap), (0, 0))),
+                    jnp.pad(cent, (0, cap), constant_values=jnp.inf),
+                    jnp.pad(alive, (0, cap)))
+        return jax.jit(impl,
+                       donate_argnums=(0, 1, 2) if eff_donate else ())
+
+    return _memo(("corpus_grow", eff_donate), build)
+
+
+def corpus_gather_program() -> Callable:
+    """Jitted snapshot gather: ``(buf (cap, d), idx (n_bucket,)) ->
+    (n_bucket, d)`` — packs the live slots (host-ordered, zero-padded index
+    vector) into the dense prefix form the ragged engine consumes, so a full
+    ``run_halving`` re-run rides the exact same cached
+    :func:`ragged_program` as every other ragged tenant."""
+    def build():
+        def impl(buf: jnp.ndarray, idx: jnp.ndarray):
+            instrument.note_trace("corpus")
+            return jnp.take(buf, idx, axis=0)
+        return jax.jit(impl)
+
+    return _memo(("corpus_gather",), build)
+
+
 # --------------------------- persistent compile cache ------------------------
 
 def enable_persistent_cache(cache_dir: str) -> str:

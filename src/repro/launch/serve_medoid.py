@@ -13,10 +13,18 @@ distinct bucket no matter how traffic is shaped, and the compile odometer
 
 Per-request accounting mirrors a serving stack: queue-wait steps, batch wall
 time, and the schedule's pull count (distance evaluations) for the bucket the
-request rode in. ``warmup()`` pre-traces expected buckets before traffic
-arrives, and ``compile_cache_dir=`` (CLI ``--compile-cache``) points jax's
-persistent compilation cache at a directory so a *restarted* server never
-re-compiles a bucket it has ever seen.
+request rode in. ``warmup()`` pre-traces expected buckets — BOTH program
+variants, base and telemetry-carrying — before traffic arrives, and
+``compile_cache_dir=`` (CLI ``--compile-cache``) points jax's persistent
+compilation cache at a directory so a *restarted* server never re-compiles a
+bucket it has ever seen.
+
+Multi-tenant scheduling (``policy=`` / CLI ``--policy``): requests carry an
+optional priority and absolute deadline; the ``"edf"`` policy serves the
+earliest deadline first and sheds requests whose deadline became infeasible
+(priced from the live compile-vs-steady latency histograms through
+:class:`repro.serve.scheduler.LatencyModel`). The default ``"fifo"`` policy
+reproduces the original arrival-order behavior exactly.
 
 Observability (see :mod:`repro.obs`): every server carries a
 :class:`~repro.obs.metrics.ServerMetrics` bundle — per-bucket
@@ -53,18 +61,32 @@ from repro.core.distances import METRICS
 from repro.engine import programs, stop_round
 from repro.obs import ServerMetrics, TraceSession, instrument_exposition, \
     telemetry_to_host
+from repro.serve.scheduler import LatencyModel, resolve_policy
 
 
 @dataclasses.dataclass
 class MedoidRequest:
-    """One queued medoid query and, once answered, its result + accounting."""
+    """One queued medoid query and, once answered, its result + accounting.
+
+    ``priority`` / ``deadline_s`` feed the scheduling policy (see
+    :mod:`repro.serve.scheduler`): the deadline is *absolute* on the
+    server's clock, priority breaks ties among equal deadlines under EDF.
+    A request the scheduler gave up on (its deadline became infeasible)
+    lands in ``server.shed`` with ``shed=True`` and no medoid."""
     rid: int
     data: jnp.ndarray                  # (n, d) candidate set
     submit_step: int
+    priority: int = 0                  # higher = more urgent (EDF tie-break)
+    deadline_s: Optional[float] = None  # absolute, on the server's clock
     medoid: Optional[int] = None       # index < n once answered
     wait_steps: int = 0                # scheduler steps spent queued
     batch_wall_s: float = 0.0          # wall time of the dispatch it rode in
     pulls: int = 0                     # scheduled distance evals of that dispatch
+    submit_s: float = 0.0              # server-clock admission time
+    finish_s: Optional[float] = None   # server-clock answer/shed time
+    shed: bool = False                 # dropped unanswered by the policy
+    deadline_met: Optional[bool] = None  # answered in time? (None: no deadline)
+    gap: Optional[float] = None        # final-round winner gap (hardness)
 
     @property
     def n(self) -> int:
@@ -78,19 +100,24 @@ class MedoidRequest:
 class MedoidServer:
     """Continuous-batching medoid server (admit / step / drain).
 
-    One ``step()`` services the *oldest* bucket group: all queued requests
-    sharing the head-of-queue request's ``(n_bucket, d)`` signature, up to
-    ``max_batch`` of them, dispatched as one ragged batch padded to exactly
-    ``max_batch`` slots (dummy length-1 queries fill the tail, so group size
-    never changes the compiled signature). Remaining requests wait for the
-    next step — FIFO across buckets, batched within a bucket.
+    One ``step()`` asks the scheduling policy (``policy=`` — ``"fifo"``
+    default, ``"edf"`` for earliest-deadline-first with load shedding, see
+    :mod:`repro.serve.scheduler`) which bucket group to service: the chosen
+    requests share one ``(n_bucket, d)`` signature, up to ``max_batch`` of
+    them, dispatched as one ragged batch padded to exactly ``max_batch``
+    slots (dummy length-1 queries fill the tail, so group size never
+    changes the compiled signature). Remaining requests wait for the next
+    step; under FIFO this is exactly the original oldest-bucket-group
+    behavior, bit for bit.
     """
 
     def __init__(self, *, metric: str = "l2", backend: str = "reference",
                  budget_per_arm: int = 24, max_batch: int = 8,
                  min_bucket: int = DEFAULT_MIN_BUCKET, seed: int = 0,
                  compile_cache_dir: Optional[str] = None,
-                 trace: Optional[TraceSession] = None):
+                 trace: Optional[TraceSession] = None,
+                 policy="fifo", clock=None, collect_gaps: bool = True,
+                 latency_quantile: float = 0.9):
         if metric not in METRICS:
             raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
         get_backend(backend)      # fail at construction, not mid-dispatch
@@ -105,6 +132,7 @@ class MedoidServer:
         self.min_bucket = min_bucket
         self.queue: list[MedoidRequest] = []
         self.done: dict[int, MedoidRequest] = {}
+        self.shed: dict[int, MedoidRequest] = {}
         self.dispatches = 0
         self.buckets_seen: set[tuple[int, int]] = set()   # (n_bucket, d)
         self._step = 0
@@ -115,14 +143,41 @@ class MedoidServer:
         # nothing on the device path); a TraceSession additionally switches
         # every dispatch to the telemetry-carrying program variant (same
         # single dispatch, bit-identical answers) and streams span / round /
-        # select events to JSONL.
+        # select events to JSONL. ``collect_gaps`` rides the same telemetry
+        # variant WITHOUT a trace session to feed the winner-gap hardness
+        # histogram (answers stay bit-identical either way).
         self.trace = trace
+        self.collect_gaps = collect_gaps
         self._metrics = ServerMetrics()
+        # scheduling: policy objects are pure queue transformers (see
+        # repro.serve.scheduler); the latency model prices a request's
+        # bucket from the live compile-vs-steady dispatch histograms, and
+        # the clock (monotonic unless injected — tests inject a fake) is
+        # the timeline deadlines are expressed on.
+        self._policy = resolve_policy(policy)
+        self._clock = clock if clock is not None else time.monotonic
+        self._latency_model = LatencyModel(self._metrics,
+                                           quantile=latency_quantile)
+
+    @property
+    def policy(self) -> str:
+        return getattr(self._policy, "name", type(self._policy).__name__)
+
+    @property
+    def _telemetry_on(self) -> bool:
+        return self.trace is not None or self.collect_gaps
 
     # ------------------------------- admission ----------------------------
-    def submit(self, data: jnp.ndarray, rid: Optional[int] = None) -> int:
+    def submit(self, data: jnp.ndarray, rid: Optional[int] = None, *,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one (n, d) query; returns its request id. Rejects empty or
-        mis-shaped queries at admission (never mid-dispatch)."""
+        mis-shaped queries at admission (never mid-dispatch).
+
+        ``priority`` and ``deadline_s`` (absolute, on the server's clock —
+        ``now() + budget`` for a relative budget) feed the scheduling
+        policy; under the default FIFO policy they are recorded but do not
+        reorder anything."""
         data = jnp.asarray(data)
         if data.ndim != 2:
             raise ValueError(f"query must be (n, d), got shape {data.shape}")
@@ -130,14 +185,22 @@ class MedoidServer:
             raise ValueError("all-padding query rejected: n must be >= 1")
         if rid is None:
             rid = self._next_rid
-        if rid in self.done or any(q.rid == rid for q in self.queue):
+        if rid in self.done or rid in self.shed \
+                or any(q.rid == rid for q in self.queue):
             raise ValueError(f"duplicate request id {rid}")
         self._next_rid = max(self._next_rid, rid) + 1
         self.queue.append(MedoidRequest(rid=rid, data=data,
-                                        submit_step=self._step))
+                                        submit_step=self._step,
+                                        priority=priority,
+                                        deadline_s=deadline_s,
+                                        submit_s=self._clock()))
         self._metrics.record_submit(
             self._bucket_label(*self._bucket_key(self.queue[-1])))
         return rid
+
+    def now(self) -> float:
+        """The server's clock (deadlines are absolute on this timeline)."""
+        return self._clock()
 
     @property
     def pending(self) -> int:
@@ -158,19 +221,22 @@ class MedoidServer:
         t_all = time.time()
         for n, d in shapes:
             n_bucket = bucket_n(max(1, int(n)), self.min_bucket)
-            data, lengths = pack_queries(
-                [jnp.zeros((1, int(d)), jnp.float32)],
-                min_bucket=n_bucket, pad_batch_to=self.max_batch)
             t0 = time.time()
-            # warmup must request telemetry exactly like live dispatches will
-            # (the telemetry variant is its own cached program — warming the
-            # wrong one would leave the first real step() compiling)
-            jax.block_until_ready(ragged_medoids(
-                data, lengths, jax.random.key(0),
-                budget=self.budget_per_arm * n_bucket,
-                metric=self.metric, backend=self.backend,
-                min_bucket=self.min_bucket, donate=True,
-                telemetry=self.trace is not None))
+            # warm BOTH program variants (base and telemetry-carrying): the
+            # variant a live dispatch selects depends on runtime state
+            # (trace attached? gap collection toggled?), and each variant is
+            # its own cached program — warming only one would leave the
+            # first metered call on the other variant compiling.
+            for with_tel in (False, True):
+                data, lengths = pack_queries(
+                    [jnp.zeros((1, int(d)), jnp.float32)],
+                    min_bucket=n_bucket, pad_batch_to=self.max_batch)
+                jax.block_until_ready(ragged_medoids(
+                    data, lengths, jax.random.key(0),
+                    budget=self.budget_per_arm * n_bucket,
+                    metric=self.metric, backend=self.backend,
+                    min_bucket=self.min_bucket, donate=True,
+                    telemetry=with_tel))
             timings["buckets"][f"{n_bucket}x{int(d)}"] = round(
                 time.time() - t0, 4)
         timings["traces"] = ragged_compile_count() - compiles0
@@ -185,20 +251,39 @@ class MedoidServer:
     def _bucket_label(n_bucket: int, d: int) -> str:
         return f"{n_bucket}x{d}"
 
+    def _estimate(self, req: MedoidRequest) -> Optional[float]:
+        """Seconds one dispatch of ``req``'s bucket should take (None: the
+        latency model has no applicable observation yet)."""
+        bkey = self._bucket_key(req)
+        return self._latency_model.estimate(self._bucket_label(*bkey),
+                                            compiled=bkey in self.buckets_seen)
+
     def step(self) -> list[MedoidRequest]:
-        """Service the oldest bucket group; returns the answered requests."""
+        """Service the scheduling policy's chosen bucket group; returns the
+        answered requests. Requests the policy shed (deadline infeasible)
+        land in :attr:`shed` with ``shed=True``."""
         self._step += 1
         if not self.queue:
             return []
-        bkey = self._bucket_key(self.queue[0])
-        batch: list[MedoidRequest] = []
-        rest: list[MedoidRequest] = []
-        for q in self.queue:
-            if len(batch) < self.max_batch and self._bucket_key(q) == bkey:
-                batch.append(q)
-            else:
-                rest.append(q)
+        now = self._clock()
+        batch, rest, shed = self._policy.select(
+            self.queue, now=now, max_batch=self.max_batch,
+            bucket_key=self._bucket_key, estimate=self._estimate)
+        for q in shed:
+            q.shed = True
+            q.finish_s = self._clock()
+            q.wait_steps = self._step - q.submit_step - 1
+            self.shed[q.rid] = q
+            label = self._bucket_label(*self._bucket_key(q))
+            self._metrics.record_shed(label)
+            self._metrics.record_deadline(label, False)
+            if self.trace is not None:
+                self.trace.event("shed", rid=q.rid, bucket=label, n=q.n,
+                                 deadline_s=q.deadline_s, step=self._step)
         self.queue = rest
+        if not batch:
+            return []
+        bkey = self._bucket_key(batch[0])
         n_bucket, _ = bkey
 
         # (max_batch, n_bucket, d) with dummy length-1 tail slots: group size
@@ -210,7 +295,7 @@ class MedoidServer:
         self._key, sub = jax.random.split(self._key)
 
         label = self._bucket_label(*bkey)
-        with_tel = self.trace is not None
+        with_tel = self._telemetry_on
         compiles0 = ragged_compile_count()
         t0 = time.time()
         try:
@@ -235,25 +320,38 @@ class MedoidServer:
         # rows; identical to schedule_pulls whenever the schedule ends at
         # its output round, which round_schedule guarantees)
         rounds = round_schedule(n_bucket, budget)
-        pulls = sum(r.pulls for r in rounds[: stop_round(rounds) + 1])
+        stop = stop_round(rounds)
+        pulls = sum(r.pulls for r in rounds[: stop + 1])
         self.dispatches += 1
         self.buckets_seen.add(bkey)
+        finish = self._clock()
         for slot, q in enumerate(batch):
             q.medoid = medoids[slot]
             q.wait_steps = self._step - q.submit_step - 1
             q.batch_wall_s = round(wall, 4)
             q.pulls = pulls
+            q.finish_s = finish
+            if q.deadline_s is not None:
+                q.deadline_met = finish <= q.deadline_s
+                self._metrics.record_deadline(label, q.deadline_met)
             self.done[q.rid] = q
         self._metrics.record_dispatch(
             label, wall_s=wall, batch=len(batch), slots=self.max_batch,
             pulls_per_request=pulls, waits=[q.wait_steps for q in batch],
             compiled=traced > 0)
+        tel_host = telemetry_to_host(tel) if with_tel else None
+        if tel_host is not None and len(rounds):
+            # final executed round's winner gap per slot: the server's
+            # per-query hardness signal (NaN — fewer than two alive arms —
+            # is dropped by the histogram)
+            for slot, q in enumerate(batch):
+                q.gap = float(tel_host["gap"][slot, stop])
+                self._metrics.record_gap(label, q.gap)
         if self.trace is not None:
             self.trace.event("span", name="dispatch", dur_s=round(wall, 6),
                              traces={"ragged": traced} if traced else {},
                              dispatches={"ragged": 1}, bucket=label,
                              batch=len(batch), step=self._step)
-            tel_host = telemetry_to_host(tel)
             for slot, q in enumerate(batch):
                 # per-request rows: batched queries share the schedule
                 # columns but each slot's alive/theta/gap are its own
@@ -280,15 +378,21 @@ class MedoidServer:
 
     def stats(self) -> dict:
         lat = [q.wait_steps for q in self.done.values()]
+        deadlined = [q for q in self.done.values()
+                     if q.deadline_met is not None]
         return {
             "answered": len(self.done),
             "pending": len(self.queue),
+            "shed": len(self.shed),
             "dispatches": self.dispatches,
             "distinct_buckets": len(self.buckets_seen),
             "recompiles": self.recompiles,
             "mean_wait_steps": round(sum(lat) / len(lat), 2) if lat else 0.0,
             "max_wait_steps": max(lat) if lat else 0,
             "total_pulls": sum(q.pulls for q in self.done.values()),
+            "deadlines_met": sum(q.deadline_met for q in deadlined),
+            "deadlines_missed": sum(not q.deadline_met for q in deadlined),
+            "policy": self.policy,
             "backend": self.backend,
             "metric": self.metric,
         }
@@ -334,6 +438,16 @@ def main(argv=None):
     ap.add_argument("--arrivals-per-step", type=int, default=4,
                     help="requests admitted between scheduler steps")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "edf"],
+                    help="scheduling policy: fifo (arrival order, default) "
+                         "or edf (earliest-deadline-first with load "
+                         "shedding)")
+    ap.add_argument("--deadline-frac", type=float, default=0.0,
+                    help="fraction of synthetic requests carrying a "
+                         "deadline (0 disables deadlines)")
+    ap.add_argument("--deadline-s", type=float, default=0.5,
+                    help="relative deadline budget (seconds from admission) "
+                         "for deadlined synthetic requests")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent XLA compile cache directory (restarted "
                          "servers skip recompiling known buckets)")
@@ -358,7 +472,7 @@ def main(argv=None):
                        budget_per_arm=args.budget_per_arm,
                        max_batch=args.max_batch, seed=args.seed,
                        compile_cache_dir=args.compile_cache,
-                       trace=session)
+                       trace=session, policy=args.policy)
     trace = synthetic_trace(args.requests, args.n_min, args.n_max, args.d,
                             seed=args.seed)
     warmup_stats = None
@@ -373,7 +487,11 @@ def main(argv=None):
             q = next(it, None)
             if q is None:
                 break
-            srv.submit(q)
+            deadlined = args.deadline_frac > 0 and \
+                (admitted % max(1, round(1 / args.deadline_frac))) == 0
+            srv.submit(q, deadline_s=srv.now() + args.deadline_s
+                       if deadlined else None,
+                       priority=1 if deadlined else 0)
             admitted += 1
         srv.step()
     out = srv.stats()

@@ -29,6 +29,10 @@ from typing import Iterable, Optional
 LATENCY_BUCKETS_S = (0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0, 60.0)
 WAIT_BUCKETS_STEPS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
 OCCUPANCY_BUCKETS = (0.25, 0.5, 0.75, 1.0)
+# Winner-gap buckets (distance units): final-round runner-up minus winner.
+# A near-zero gap is a *hard* query (halving barely separated the medoid);
+# the histogram is the fleet's per-query hardness monitor.
+GAP_BUCKETS = (0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 1.0, 4.0)
 
 
 def _fmt(v: float) -> str:
@@ -81,6 +85,21 @@ class _Histogram:
             self.counts[-1] += 1
         self.total += v
         self.count += 1
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Upper-bound estimate of the q-quantile from the fixed buckets
+        (None with no observations; overflow-bucket mass falls back to the
+        running mean, floored at the last finite bound)."""
+        if self.count == 0:
+            return None
+        target = q * self.count
+        cum = 0
+        for b, c in zip(self.bounds, self.counts):
+            cum += c
+            if cum >= target:
+                return float(b)
+        last = float(self.bounds[-1]) if self.bounds else 0.0
+        return max(last, self.total / self.count)
 
 
 class _Family:
@@ -211,9 +230,32 @@ class ServerMetrics:
         self.latency = r.histogram(
             "medoid_dispatch_seconds", "wall time of one ragged dispatch",
             ("bucket", "phase"), buckets=LATENCY_BUCKETS_S)
+        self.winner_gap = r.histogram(
+            "medoid_winner_gap",
+            "final-round runner-up minus winner estimate (query hardness)",
+            ("bucket",), buckets=GAP_BUCKETS)
+        self.shed = r.counter(
+            "medoid_shed_total",
+            "requests shed unanswered (deadline hopeless at scheduling time)",
+            ("bucket",))
+        self.deadline = r.counter(
+            "medoid_deadline_total",
+            "deadlined requests answered, by whether they made it",
+            ("bucket", "outcome"))
 
     def record_submit(self, bucket: str) -> None:
         self.requests.labels(bucket).inc()
+
+    def record_gap(self, bucket: str, gap: float) -> None:
+        """One answered query's final-round winner gap (NaN — fewer than
+        two alive arms — is dropped by the histogram)."""
+        self.winner_gap.labels(bucket).observe(gap)
+
+    def record_shed(self, bucket: str) -> None:
+        self.shed.labels(bucket).inc()
+
+    def record_deadline(self, bucket: str, met: bool) -> None:
+        self.deadline.labels(bucket, "met" if met else "missed").inc()
 
     def record_dispatch(self, bucket: str, *, wall_s: float, batch: int,
                         slots: int, pulls_per_request: int,

@@ -1,0 +1,35 @@
+"""Live corpus serving: mutable corpora, incremental medoid maintenance,
+deadline-aware multi-tenant scheduling.
+
+The layers below this package answer *frozen* corpora: a query ships its
+own candidate set, the engine halves it, the answer never outlives the
+call. Production embedding services don't work that way — the corpus is a
+long-lived, mutating object and "the medoid" is a maintained quantity, not
+a one-shot answer. This package grows the serving stack accordingly:
+
+* :mod:`repro.serve.corpus` — :class:`CorpusStore`, a versioned
+  device-resident point store (slot freelist inside power-of-two capacity
+  buckets; every mutation is one cached XLA program from
+  :mod:`repro.engine.programs`, never a retrace);
+* :mod:`repro.serve.maintain` — :class:`MaintainedMedoid`, incremental
+  medoid maintenance over a store: a mutation re-verifies the incumbent
+  with a single exact n-vector (the SWAP trick) and falls back to a full
+  ``run_halving`` re-run only when the incumbent is actually dethroned;
+* :mod:`repro.serve.scheduler` — per-request priorities + deadlines,
+  earliest-deadline-first admission with load shedding fed by the
+  :class:`~repro.obs.metrics.ServerMetrics` latency histograms (the policy
+  behind ``MedoidServer(policy="edf")``);
+* :mod:`repro.serve.stream` — the mutation-stream driver CLI
+  (``python -m repro.serve.stream``) CI's serve-smoke job runs.
+"""
+from __future__ import annotations
+
+from repro.serve.corpus import CorpusStore
+from repro.serve.maintain import MaintainedMedoid, MedoidUpdate
+from repro.serve.scheduler import (POLICIES, EdfPolicy, FifoPolicy,
+                                   LatencyModel, resolve_policy)
+
+__all__ = [
+    "CorpusStore", "EdfPolicy", "FifoPolicy", "LatencyModel",
+    "MaintainedMedoid", "MedoidUpdate", "POLICIES", "resolve_policy",
+]
