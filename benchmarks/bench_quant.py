@@ -1,0 +1,101 @@
+"""Quantized distance subsystem: throughput vs fp32 at asserted parity.
+
+The quantized pipeline (PR 10, :mod:`repro.quant`) runs the Gram stage of
+every round in bf16 or per-row-scaled int8, widens the halving survivor
+margin by the precision's error model, and verifies the final survivor set
+in exact fp32 — so the served answer is fp32-exact whenever the
+verification certificate holds (and comes from a same-key fp32 fallback
+when it doesn't). This section keeps that contract machine-checkable:
+
+* one cell per precision (``fp32`` / ``bf16`` / ``int8``) on the n=1024
+  engine workload (same shape as the BENCH_engine ragged cell), each with
+  the compile/steady split of the engine sections;
+* the quantized cells **assert** ``verified=True`` (the certificate held —
+  no fallback ran) and that the final medoid is **identical** to the fp32
+  cell's: any drift is a hard failure here, not a judgement call;
+* ``pulls`` includes the verification epilogue's exact distance evals, so
+  the quantized cells' pull overhead vs fp32 is visible in the JSON;
+* a **hardness row** emits the instance's difficulty functionals
+  (:mod:`repro.core.hardness`: the Δ₂ gap, dispersion σ, and the paper's
+  H₂ / H̃₂ budgets) — the context that says *how hard* the instance the
+  parity assertion ran on actually was.
+
+``python benchmarks/run.py --only quant`` writes ``BENCH_quant.json``.
+Throughput note: the bf16/int8 rate advantage is an MXU property; on CPU
+the cells still measure (and assert parity), but ``ratio_vs_fp32`` may
+not show a speedup.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def _cell(data, key, precision: str, budget_per_arm: int):
+    from repro.api import find_medoid
+    t0 = time.time()
+    first = find_medoid(data, key, budget_per_arm=budget_per_arm,
+                        precision=precision)
+    compile_us = (time.time() - t0) * 1e6   # first call: trace + compile
+    t0 = time.time()
+    res = find_medoid(data, key, budget_per_arm=budget_per_arm,
+                      precision=precision)
+    steady_us = (time.time() - t0) * 1e6    # cached program dispatch
+    assert res.medoid == first.medoid, \
+        f"same-key {precision} re-run changed its answer"
+    return res, compile_us, steady_us
+
+
+def run(n: int = 1024, d: int = 16, seed: int = 0,
+        budget_per_arm: int = 16) -> list[dict]:
+    from repro.api import find_medoid
+    from repro.core.hardness import hardness_stats
+
+    key = jax.random.key(seed)
+    data = jax.random.normal(jax.random.fold_in(key, 0), (n, d))
+    qkey = jax.random.fold_in(key, 1)
+
+    rows: list[dict] = []
+    cells: dict[str, tuple] = {}
+    for precision in ("fp32", "bf16", "int8"):
+        cells[precision] = _cell(data, qkey, precision, budget_per_arm)
+
+    fp32_res, _, fp32_steady = cells["fp32"]
+    for precision, (res, compile_us, steady_us) in cells.items():
+        derived = f"medoid={res.medoid} n={n} d={d} metric={res.metric}"
+        if precision == "fp32":
+            assert res.verified is None, "fp32 run carries no certificate"
+        else:
+            # acceptance: certificate held (no fallback) AND the answer is
+            # the fp32 cell's, bit for bit
+            assert res.verified is True, (
+                f"{precision} verification certificate failed on the "
+                f"benchmark workload (fallback would have run)")
+            assert res.medoid == fp32_res.medoid, (
+                f"{precision} medoid {res.medoid} != fp32 medoid "
+                f"{fp32_res.medoid}")
+            ratio = fp32_steady / steady_us if steady_us else float("nan")
+            derived += (f" verified=True medoid_matches_fp32=True "
+                        f"pull_overhead={res.pulls - fp32_res.pulls} "
+                        f"ratio_vs_fp32={ratio:.2f}")
+        rows.append({"name": f"quant_medoid_{precision}_n{n}",
+                     "us_per_call": round(steady_us, 1),
+                     "compile_us": round(compile_us, 1),
+                     "steady_us": round(steady_us, 1),
+                     "pulls": res.pulls, "derived": derived})
+
+    # ---- hardness row: how hard was the instance parity was asserted on --
+    hs = hardness_stats(data, metric="l2")
+    rows.append({"name": f"quant_hardness_n{n}", "us_per_call": 0.0,
+                 "derived": (f"delta2={float(hs.delta[1]):.5f} "
+                             f"sigma={float(hs.sigma):.4f} "
+                             f"h2={float(hs.h2):.1f} "
+                             f"h2_tilde={float(hs.h2_tilde):.1f} "
+                             f"budget={budget_per_arm * n}")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']!r}")

@@ -58,7 +58,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "algorithms", "curves", "correlation",
                              "kernels", "backends", "ragged", "cluster",
-                             "engine", "serve", "roofline"])
+                             "engine", "serve", "quant", "roofline"])
     ap.add_argument("--out-dir", default=".",
                     help="where BENCH_<section>.json files are written")
     args = ap.parse_args()
@@ -66,8 +66,8 @@ def main() -> None:
 
     from benchmarks import (bench_algorithms, bench_backends, bench_cluster,
                             bench_correlation, bench_engine,
-                            bench_error_curves, bench_kernels, bench_ragged,
-                            bench_serve, roofline_table)
+                            bench_error_curves, bench_kernels, bench_quant,
+                            bench_ragged, bench_serve, roofline_table)
 
     sections = {
         "algorithms": lambda: bench_algorithms.run(
@@ -85,6 +85,7 @@ def main() -> None:
             n_small=512, n_big=4096, d=64 * scale),
         "engine": lambda: bench_engine.run(d=16 * scale),
         "serve": lambda: bench_serve.run(steps=120 * scale),
+        "quant": lambda: bench_quant.run(n=1024, d=16 * scale),
         "roofline": lambda: roofline_table.run(
             ("results_dryrun_16x16.jsonl", "results_dryrun_2x16x16.jsonl")),
     }

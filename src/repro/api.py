@@ -69,7 +69,16 @@ class MedoidConfig:
 
     ``telemetry`` additionally returns the fixed-shape per-round trace of
     :mod:`repro.obs.telemetry` (host numpy, one row per executed round) —
-    same single dispatch, bit-identical answers; ``corr_sh`` only."""
+    same single dispatch, bit-identical answers; ``corr_sh`` only.
+
+    ``precision`` selects the distance arithmetic: ``"fp32"`` (default,
+    bit-identical to every previous release), or the quantized ``"bf16"`` /
+    ``"int8"`` paths of :mod:`repro.quant` — halving runs margin-widened
+    against the quantization error model (``quant_error_model``: measured
+    ``"probe"`` or certified-worst-case ``"analytic"``) and the finalists
+    are re-verified in exact fp32; a run whose widened margins overflowed
+    capacity falls back to a same-key fp32 re-run, so answers are exact
+    either way. ``corr_sh`` only."""
     metric: str = "l2"
     backend: str = "reference"
     budget_per_arm: int = 24
@@ -77,6 +86,8 @@ class MedoidConfig:
     min_bucket: int = DEFAULT_MIN_BUCKET
     seed: int = 0          # key when the caller passes none
     telemetry: bool = False
+    precision: str = "fp32"
+    quant_error_model: str = "probe"
 
 
 @dataclass(frozen=True)
@@ -97,7 +108,16 @@ class KMedoidsConfig:
 @dataclass(frozen=True)
 class MedoidResult:
     """One answered medoid query: the winning index plus exact (scheduled)
-    pull accounting and the round plan that produced it."""
+    pull accounting and the round plan that produced it.
+
+    ``precision`` echoes the config. ``verified`` is ``None`` for fp32 runs;
+    for quantized runs it is ``True`` when the widened margins held all the
+    way down (the quantized answer carries the exact-fp32-finalist
+    certificate) and ``False`` when capacity overflowed — the reported
+    ``medoid`` then came from the same-key fp32 fallback re-run and is exact
+    regardless. ``hardness`` (telemetry runs only) carries the instance
+    hardness stats of :mod:`repro.core.hardness` — Δ₂ gap, σ spread, and
+    the paper's H₂/H̃₂ hardness sums."""
     medoid: int
     pulls: int
     n: int
@@ -107,6 +127,9 @@ class MedoidResult:
     rounds: tuple = ()     # (survivors, num_refs) per executed round
     telemetry: Optional[dict] = None   # per-round trace (host numpy) when
     #                                    MedoidConfig.telemetry is set
+    precision: str = "fp32"
+    verified: Optional[bool] = None
+    hardness: Optional[dict] = None
 
 
 def _resolve(config, overrides, cls):
@@ -146,6 +169,13 @@ def find_medoid(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
     if cfg.telemetry and (cfg.algo != "corr_sh" or mesh is not None):
         raise ValueError("telemetry=True requires algo='corr_sh' without "
                          "mesh= (only the engine round loop is instrumented)")
+    if cfg.precision != "fp32":
+        from repro import quant
+        quant.check_precision(cfg.precision)
+        if cfg.algo != "corr_sh" or mesh is not None:
+            raise ValueError("precision != 'fp32' requires algo='corr_sh' "
+                             "without mesh= (only the engine round loop has "
+                             "the widened-margin + verification path)")
 
     if mesh is not None:
         if cfg.algo != "corr_sh":
@@ -191,23 +221,58 @@ def find_medoid(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
             tel = telemetry_to_host(obs_telemetry.empty())
         return MedoidResult(medoid=0, pulls=0, n=1, algo="corr_sh",
                             metric=cfg.metric, backend=cfg.backend,
-                            telemetry=tel)
+                            telemetry=tel, precision=cfg.precision,
+                            verified=None if cfg.precision == "fp32"
+                            else True)
     out = _medoid_impl(data, key, budget=budget, metric=cfg.metric,
-                       backend=cfg.backend, telemetry=cfg.telemetry)
-    tel = None
-    if cfg.telemetry:
-        out, tel = out
-        tel = telemetry_to_host(tel)
-    medoid = int(out)
+                       backend=cfg.backend, telemetry=cfg.telemetry,
+                       precision=cfg.precision,
+                       error_model=cfg.quant_error_model)
     rounds = round_schedule(n, budget)
     executed = rounds[: stop_round(rounds) + 1]
-    return MedoidResult(medoid=medoid,
-                        pulls=sum(r.pulls for r in executed), n=n,
+    pulls = sum(r.pulls for r in executed)
+    tel = None
+    verified = None
+    if cfg.precision == "fp32":
+        if cfg.telemetry:
+            out, tel = out
+        medoid = int(out)
+    else:
+        from repro import quant
+        if cfg.telemetry:
+            out, ver, tel = out
+        else:
+            out, ver = out
+        verified = bool(ver)
+        pulls += quant.verify_pulls(n, rounds)
+        if verified:
+            medoid = int(out)
+        else:
+            # Widened margins overflowed their buffers somewhere — the
+            # quantized answer lost its certificate. Re-run in fp32 with the
+            # SAME key: identical draws, exact estimates, exact answer (and
+            # the exact telemetry replaces the quantized trace).
+            fout = _medoid_impl(data, key, budget=budget, metric=cfg.metric,
+                                backend=cfg.backend, telemetry=cfg.telemetry)
+            if cfg.telemetry:
+                fout, tel = fout
+            medoid = int(fout)
+            pulls += sum(r.pulls for r in executed)
+    if tel is not None:
+        tel = telemetry_to_host(tel)
+    hardness = None
+    if cfg.telemetry:
+        from repro.core.hardness import hardness_stats
+        hs = hardness_stats(data, metric=cfg.metric)
+        hardness = {"delta2": float(hs.delta[1]), "sigma": float(hs.sigma),
+                    "h2": float(hs.h2), "h2_tilde": float(hs.h2_tilde)}
+    return MedoidResult(medoid=medoid, pulls=pulls, n=n,
                         algo="corr_sh", metric=cfg.metric,
                         backend=cfg.backend,
                         rounds=tuple((r.survivors, r.num_refs)
                                      for r in executed),
-                        telemetry=tel)
+                        telemetry=tel, precision=cfg.precision,
+                        verified=verified, hardness=hardness)
 
 
 # -------------------------------- multi query -------------------------------
@@ -226,14 +291,34 @@ def find_medoids_batch(data: jnp.ndarray, key: Optional[jax.Array] = None, *,
                          f"got {cfg.algo!r}")
     data = jnp.asarray(data)
     n = int(data.shape[1]) if data.ndim == 3 else 0
-    out = _batch_impl(data, _key_of(key, cfg),
+    key = _key_of(key, cfg)
+    out = _batch_impl(data, key,
                       budget=cfg.budget_per_arm * max(n, 1),
                       metric=cfg.metric, backend=cfg.backend,
-                      telemetry=cfg.telemetry)
-    if cfg.telemetry:
-        medoids, tel = out
+                      telemetry=cfg.telemetry, precision=cfg.precision,
+                      error_model=cfg.quant_error_model)
+    tel = None
+    if cfg.precision == "fp32":
+        if cfg.telemetry:
+            medoids, tel = out
+        else:
+            medoids = out
+    else:
+        if cfg.telemetry:
+            medoids, verified, tel = out
+        else:
+            medoids, verified = out
+        if not bool(jnp.all(verified)):
+            # Unverified queries fall back to the exact same-key fp32 batch
+            # (one extra dispatch, shared by every overflowed query).
+            fout = _batch_impl(data, key,
+                               budget=cfg.budget_per_arm * max(n, 1),
+                               metric=cfg.metric, backend=cfg.backend,
+                               telemetry=False)
+            medoids = jnp.where(verified, medoids, fout)
+    if tel is not None:
         return medoids, telemetry_to_host(tel)
-    return out
+    return medoids
 
 
 def find_medoids_ragged(data, lengths=None,
@@ -269,15 +354,37 @@ def find_medoids_ragged(data, lengths=None,
     n_bucket = int(data.shape[1]) if data.ndim == 3 else 1
     from repro.core.bucketing import bucket_n
     n_bucket = bucket_n(n_bucket, cfg.min_bucket)
-    out = ragged_medoids(data, lengths, _key_of(key, cfg),
+    key = _key_of(key, cfg)
+    # A quantized run may need the buffer again for the fp32 fallback, so
+    # only the fallback dispatch (the buffer's last use) may take it.
+    out = ragged_medoids(data, lengths, key,
                          budget=cfg.budget_per_arm * n_bucket,
                          metric=cfg.metric, backend=cfg.backend,
-                         min_bucket=cfg.min_bucket, donate=donate,
-                         telemetry=cfg.telemetry)
-    if cfg.telemetry:
-        medoids, tel = out
+                         min_bucket=cfg.min_bucket,
+                         donate=donate and cfg.precision == "fp32",
+                         telemetry=cfg.telemetry, precision=cfg.precision,
+                         error_model=cfg.quant_error_model)
+    tel = None
+    if cfg.precision == "fp32":
+        if cfg.telemetry:
+            medoids, tel = out
+        else:
+            medoids = out
+    else:
+        if cfg.telemetry:
+            medoids, verified, tel = out
+        else:
+            medoids, verified = out
+        if not bool(jnp.all(verified)):
+            fout = ragged_medoids(data, lengths, key,
+                                  budget=cfg.budget_per_arm * n_bucket,
+                                  metric=cfg.metric, backend=cfg.backend,
+                                  min_bucket=cfg.min_bucket, donate=donate,
+                                  telemetry=False)
+            medoids = jnp.where(verified, medoids, fout)
+    if tel is not None:
         return medoids, telemetry_to_host(tel)
-    return out
+    return medoids
 
 
 # ------------------------------ mutable corpus ------------------------------
@@ -307,10 +414,12 @@ def maintain_medoid(data=None, *, d: Optional[int] = None,
     if data is not None:
         store = CorpusStore.from_points(jnp.asarray(data), metric=cfg.metric,
                                         backend=cfg.backend,
-                                        min_bucket=cfg.min_bucket)
+                                        min_bucket=cfg.min_bucket,
+                                        precision=cfg.precision)
     elif d is not None:
         store = CorpusStore(d, metric=cfg.metric, backend=cfg.backend,
-                            min_bucket=cfg.min_bucket)
+                            min_bucket=cfg.min_bucket,
+                            precision=cfg.precision)
     else:
         raise ValueError("pass data (n, d) or d= to start an empty corpus")
     return MaintainedMedoid(store, budget_per_arm=cfg.budget_per_arm,

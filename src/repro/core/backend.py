@@ -98,6 +98,14 @@ class DistanceBackend:
 _REGISTRY: dict[str, DistanceBackend] = {}
 
 
+def _ensure_plugins() -> None:
+    """Pull in backend-registering packages that sit ABOVE this module in the
+    layering (they import us, so they can't be imported at module scope).
+    Called lazily from the resolvers — by the time anyone asks the registry
+    for a name, importing :mod:`repro.quant` is cycle-free."""
+    import repro.quant.backends  # noqa: F401  (registers quant_* backends)
+
+
 def register_backend(backend: DistanceBackend) -> DistanceBackend:
     """Add ``backend`` to the registry (last registration wins on a name)."""
     _REGISTRY[backend.name] = backend
@@ -111,6 +119,8 @@ def get_backend(backend: Union[str, DistanceBackend, None]) -> DistanceBackend:
         return _REGISTRY["reference"]
     if isinstance(backend, DistanceBackend):
         return backend
+    if backend not in _REGISTRY:
+        _ensure_plugins()
     try:
         return _REGISTRY[backend]
     except KeyError:
@@ -119,6 +129,7 @@ def get_backend(backend: Union[str, DistanceBackend, None]) -> DistanceBackend:
 
 
 def list_backends() -> tuple[str, ...]:
+    _ensure_plugins()
     return tuple(sorted(_REGISTRY))
 
 

@@ -94,21 +94,26 @@ def correlated_sequential_halving(
 
 def _medoid_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
                  metric: str = "l2", backend: str = "reference",
-                 donate: bool = False, telemetry: bool = False):
+                 donate: bool = False, telemetry: bool = False,
+                 precision: str = "fp32", error_model: str = "probe"):
     """Single-query medoid (the facade's ``find_medoid`` kernel): dispatch
     the cached jitted program for this (budget, metric, backend) config.
     With ``telemetry`` the program returns ``(index, per-round telemetry)``
-    — same single dispatch (see :mod:`repro.obs.telemetry`)."""
+    — same single dispatch (see :mod:`repro.obs.telemetry`). Quantized
+    programs (``precision != "fp32"``) additionally return the traced
+    ``verified`` certificate right after the index."""
     instrument.note_dispatch("medoid")
     fn = programs.medoid_program(budget=budget, metric=metric,
                                  backend=backend, donate=donate,
-                                 telemetry=telemetry)
+                                 telemetry=telemetry, precision=precision,
+                                 error_model=error_model)
     return fn(data, key)
 
 
 def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
                 metric: str = "l2", backend: str = "reference",
-                donate: bool = False, telemetry: bool = False):
+                donate: bool = False, telemetry: bool = False,
+                precision: str = "fp32", error_model: str = "probe"):
     """Batched multi-query medoid: ``data (B, n, d) -> (B,)`` indices
     (``((B,), telemetry)`` with ``telemetry``).
 
@@ -124,7 +129,8 @@ def _batch_impl(data: jnp.ndarray, key: jax.Array, *, budget: int,
     instrument.note_dispatch("batch")
     fn = programs.batch_program(budget=budget, metric=metric,
                                 backend=backend, donate=donate,
-                                telemetry=telemetry)
+                                telemetry=telemetry, precision=precision,
+                                error_model=error_model)
     return fn(data, key)
 
 
@@ -146,7 +152,8 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
                    budget: int, metric: str = "l2",
                    backend: str = "reference",
                    min_bucket: int = DEFAULT_MIN_BUCKET,
-                   donate: bool = False, telemetry: bool = False):
+                   donate: bool = False, telemetry: bool = False,
+                   precision: str = "fp32", error_model: str = "probe"):
     """Ragged multi-query medoid: ``data (B, n_max, d)`` + per-query
     ``lengths (B,)`` -> ``(B,)`` medoid indices (each < its query's length);
     ``((B,) indices, telemetry)`` with ``telemetry``.
@@ -192,7 +199,9 @@ def ragged_medoids(data: jnp.ndarray, lengths, key: jax.Array, *,
     instrument.note_dispatch("ragged")
     fn = programs.ragged_program(n_bucket=n_bucket, budget=budget,
                                  metric=metric, backend=backend,
-                                 donate=donate, telemetry=telemetry)
+                                 donate=donate, telemetry=telemetry,
+                                 precision=precision,
+                                 error_model=error_model)
     return fn(data, lengths, key)
 
 

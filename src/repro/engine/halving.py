@@ -72,6 +72,12 @@ OrderFn = Callable[[jnp.ndarray], jnp.ndarray]
 # Rounds per scan body (the compile-vs-compute knob; see Schedule.stacked).
 DEFAULT_BAND_ROUNDS = 3
 
+# Buffer-width slack factor for margin-widened halving (``widen=``): every
+# band (and the output round's survivor set) gets ``min(n, WIDEN_SLACK *
+# scheduled_size)`` slots, so a round may retain up to 2x its scheduled
+# survivor count before capacity truncation falsifies ``margin_ok``.
+WIDEN_SLACK = 2
+
 
 # ----------------------------- reference draws ------------------------------
 
@@ -181,6 +187,13 @@ class HalvingOutcome:
     ``telemetry`` is ``None`` unless the run carried round telemetry — then
     it is the fixed-shape per-round dict of :mod:`repro.obs.telemetry` (one
     row per executed round, scanned rounds + the output round).
+
+    Margin-widened runs (``run_halving(widen=...)``) additionally report
+    ``live`` — the traced count of live finalists in the (slack-widened)
+    ``survivors`` prefix — and ``margin_ok``, a traced bool that is ``True``
+    iff every widened survivor set fit its static buffer all the way down
+    (no margin-retained arm was ever capacity-truncated). Plain runs leave
+    both ``None``.
     """
     winner: jnp.ndarray
     winner_pos: jnp.ndarray
@@ -189,6 +202,8 @@ class HalvingOutcome:
     aux: Any
     r_stop: int
     telemetry: Any = None
+    live: Any = None
+    margin_ok: Any = None
 
 
 def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
@@ -243,11 +258,131 @@ def _scan_band(problem: HalvingProblem, band: StackedBand, order_fn: OrderFn,
     return key, buf, rows
 
 
+def _scan_band_widened(problem: HalvingProblem, band: StackedBand,
+                       keeps: Sequence[int], order_fn: OrderFn,
+                       key: jax.Array, buf: jnp.ndarray, live: jnp.ndarray,
+                       widen: jnp.ndarray, telemetry: bool = False):
+    """One band of *margin-widened* halving rounds as a single ``lax.scan``.
+
+    Identical to :func:`_scan_band` (same key sequence, draws, scoring, and
+    sort) except the live prefix is a traced carried count instead of the
+    scheduled static ``s_r``: after sorting, the round's cut is the
+    ``keep_r``-th smallest estimate (``keep_r`` = the scheduled next-round
+    survivor count) and every finite arm within ``widen`` of the cut is
+    retained — ``live`` becomes ``clip(#inband, keep_r, width)``. Because
+    the counted arms always fit the band's (slack-inflated) buffer, no arm
+    is ever lost *inside* a band; capacity truncation can only happen at the
+    static band-boundary slices, which the caller accounts in ``margin_ok``.
+    """
+    data, est = problem.data, problem.estimator
+    n = data.shape[0]
+    width, cap = band.width, band.ref_cap
+    xs = (jnp.asarray(band.num_refs, jnp.int32),
+          jnp.asarray(tuple(keeps), jnp.int32))
+
+    def body(carry, tr_keep):
+        key, buf, live = carry
+        t_r, keep_r = tr_keep
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n).astype(jnp.int32)
+        if problem.ref_mask is not None:
+            perm = perm[jnp.argsort(jnp.where(problem.ref_mask[perm], 0, 1))]
+        refs = perm[:cap]
+        pos_ok = jnp.arange(cap, dtype=jnp.int32) < t_r
+        if problem.ref_mask is not None:
+            w = (pos_ok & problem.ref_mask[refs]).astype(jnp.float32)
+            denom = jnp.maximum(jnp.sum(w), 1.0)
+        else:
+            w = pos_ok.astype(jnp.float32)
+            denom = t_r.astype(jnp.float32)
+        sums, _ = est.score(data[buf], data[refs], refs=refs, ref_mask=w)
+        theta = sums / denom                              # (width,)
+        alive = jnp.arange(width, dtype=jnp.int32) < live
+        theta = jnp.where(alive, theta, jnp.inf)
+        if problem.arm_mask is not None:
+            theta = jnp.where(problem.arm_mask[buf], theta, jnp.inf)
+        ys = obs_telemetry.round_stats(theta) if telemetry else None
+        order = order_fn(theta)
+        # The cut: the keep_r-th smallest estimate. An +inf cut (fewer than
+        # keep_r finite arms — heavy masking) keeps every finite arm.
+        cut = theta[order][keep_r - 1]
+        inband = jnp.isfinite(theta) & (theta <= cut + widen)
+        live = jnp.clip(jnp.sum(inband.astype(jnp.int32)), keep_r, width)
+        buf = buf[order]                  # stable: live ascending, dead last
+        return (key, buf, live), ys
+
+    (key, buf, live), rows = jax.lax.scan(body, (key, buf, live), xs)
+    return key, buf, live, rows
+
+
+def _run_halving_widened(problem: HalvingProblem, sched, order_fn: OrderFn,
+                         *, key: jax.Array, band_rounds: int,
+                         telemetry: bool,
+                         widen: jnp.ndarray) -> HalvingOutcome:
+    """The ``widen is not None`` body of :func:`run_halving` — see there."""
+    data, est = problem.data, problem.estimator
+    n = data.shape[0]
+    stk = sched.stacked(n, band_rounds=band_rounds, slack=WIDEN_SLACK)
+    widen = jnp.asarray(widen, jnp.float32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    live = jnp.asarray(n, jnp.int32)
+    ok = jnp.asarray(True)
+    scanned_rows = []
+    for band in stk.bands:
+        # Static boundary slice: the ONLY place a margin-retained arm can be
+        # dropped. The dropped arms are the worst-ranked of the widened set,
+        # but soundness needs all of them — record the overflow.
+        ok = ok & (live <= band.width)
+        live = jnp.minimum(live, band.width)
+        idx = idx[:band.width]
+        keeps = tuple(stk.sizes[band.start + i + 1] for i in range(len(band)))
+        key, idx, live, rows = _scan_band_widened(
+            problem, band, keeps, order_fn, key, idx, live, widen,
+            telemetry=telemetry)
+        if telemetry:
+            scanned_rows.append(rows)
+
+    out_cap = min(n, WIDEN_SLACK * stk.sizes[stk.r_stop])
+    ok = ok & (live <= out_cap)
+    live = jnp.minimum(live, out_cap)
+    survivors = idx[:out_cap]
+    rd = sched[stk.r_stop]
+    key, sub = jax.random.split(key)
+    if problem.ref_mask is not None:
+        refs = sample_refs_masked(sub, n, rd.num_refs, problem.ref_mask)
+        ref_mask = problem.ref_mask[refs].astype(jnp.float32)    # (t,)
+        denom = jnp.maximum(jnp.sum(ref_mask), 1.0)
+    else:
+        refs = sample_refs(sub, n, rd.num_refs)
+        ref_mask = None
+        denom = refs.shape[0]              # static Python int
+    sums, aux = est.score(data[survivors], data[refs], refs=refs,
+                          ref_mask=ref_mask)
+    theta = sums / denom
+    theta = jnp.where(jnp.arange(out_cap, dtype=jnp.int32) < live,
+                      theta, jnp.inf)
+    if problem.arm_mask is not None:
+        theta = jnp.where(problem.arm_mask[survivors], theta, jnp.inf)
+    pos = jnp.argmin(theta)
+    tel = None
+    if telemetry:
+        rows = scanned_rows + [jax.tree_util.tree_map(
+            lambda x: x[None], obs_telemetry.round_stats(theta))]
+        measured = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *rows)
+        tel = obs_telemetry.assemble(sched[: stk.r_stop + 1], measured)
+    return HalvingOutcome(winner=survivors[pos], winner_pos=pos,
+                          survivors=survivors, theta=theta, aux=aux,
+                          r_stop=stk.r_stop, telemetry=tel,
+                          live=live, margin_ok=ok)
+
+
 def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
                 backend: BackendLike = None, *, key: jax.Array,
                 survivor_order: Optional[OrderFn] = None,
                 band_rounds: int = DEFAULT_BAND_ROUNDS,
-                telemetry: bool = False) -> HalvingOutcome:
+                telemetry: bool = False,
+                widen: Optional[jnp.ndarray] = None) -> HalvingOutcome:
     """Run correlated sequential halving over ``schedule`` — the one round
     loop every workload shares, as one scanned array program.
 
@@ -270,6 +405,17 @@ def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
     :mod:`repro.engine.estimators`): pure traced functions of their inputs
     whose ``ref_mask`` weighting is multiplicative, since scanned rounds
     pass positional validity as weights over fixed-width reference buffers.
+
+    ``widen`` (a device scalar, e.g. :func:`repro.quant.error.margin`)
+    switches halving to the *margin-widened* rule for perturbed estimators
+    (quantized distance paths): each round keeps its scheduled count PLUS
+    every finite arm within ``widen`` of the cut, buffers carry
+    :data:`WIDEN_SLACK`-fold slack, and the outcome reports the traced
+    ``live`` finalist count and a ``margin_ok`` capacity certificate (see
+    :class:`HalvingOutcome`). ``widen=None`` (the default) traces the plain
+    scheduled-count path, byte-identical to before the option existed — a
+    zero-valued ``widen`` is NOT the same thing (the widened rule still
+    retains exact ties at the cut and changes buffer shapes).
     """
     sched = as_schedule(schedule)
     if not len(sched):
@@ -277,6 +423,10 @@ def run_halving(problem: HalvingProblem, schedule: Sequence[Round],
                          "caller should short-circuit to arm 0")
     order_fn = survivor_order if survivor_order is not None \
         else resolve_order_fn(backend)
+    if widen is not None:
+        return _run_halving_widened(problem, sched, order_fn, key=key,
+                                    band_rounds=band_rounds,
+                                    telemetry=telemetry, widen=widen)
     data, est = problem.data, problem.estimator
     n = data.shape[0]
     stk = sched.stacked(n, band_rounds=band_rounds)

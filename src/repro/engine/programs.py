@@ -66,44 +66,93 @@ def _memo(key: tuple, build: Callable[[], Callable]) -> Callable:
 
 # ------------------------------ medoid programs -----------------------------
 
+def _quant_config(precision: str, error_model: str, backend: str):
+    """Resolve (effective backend, normalized error model) for a precision.
+
+    For ``precision="fp32"`` the error model is folded to ``None`` so every
+    fp32 caller shares one cached program regardless of its quant settings;
+    otherwise the quantized backend replaces the caller's (a fused base
+    backend keeps a fused quantized path — see ``repro.quant.backends``).
+    Imports :mod:`repro.quant` lazily: the engine sits below it in layering.
+    """
+    if precision == "fp32":
+        return backend, None
+    from repro import quant
+
+    return quant.backend_for(precision, base=backend), error_model
+
+
 def medoid_program(*, budget: int, metric: str = "l2",
                    backend: str = "reference", donate: bool = False,
-                   telemetry: bool = False) -> Callable:
+                   telemetry: bool = False, precision: str = "fp32",
+                   error_model: str = "probe") -> Callable:
     """Jitted single-query medoid: ``(data (n, d), key) -> scalar index`` —
     or ``(index, telemetry dict)`` with ``telemetry`` (the per-round buffer
-    of :mod:`repro.obs.telemetry` rides the same single program)."""
+    of :mod:`repro.obs.telemetry` rides the same single program).
+
+    With ``precision`` in {"bf16", "int8"} the whole pipeline changes:
+    distances run through the quantized backend, halving runs margin-widened
+    (``widen`` from the ``error_model`` of :mod:`repro.quant.error`, traced
+    into the same program), and the finalists are re-scored in exact fp32
+    (:func:`repro.quant.verify.exact_winner`) — the program returns
+    ``(index, verified)`` (plus telemetry), where ``verified`` is the traced
+    margin-capacity certificate."""
     eff_donate = donate and donation_enabled()
+    eff_backend, eff_err = _quant_config(precision, error_model, backend)
 
     def build():
         def impl(data: jnp.ndarray, key: jax.Array):
             instrument.note_trace("medoid")
             rounds = round_schedule(data.shape[0], budget)
-            if not rounds:                        # n == 1
+            if precision == "fp32":
+                if not rounds:                    # n == 1
+                    winner = jnp.zeros((), jnp.int32)
+                    return (winner, obs_telemetry.empty()) if telemetry \
+                        else winner
+                problem = HalvingProblem(
+                    data, medoid_centrality(eff_backend, metric))
+                out = run_halving(problem, rounds, eff_backend, key=key,
+                                  telemetry=telemetry)
+                return (out.winner, out.telemetry) if telemetry \
+                    else out.winner
+            from repro import quant
+
+            if not rounds:                        # n == 1: trivially exact
                 winner = jnp.zeros((), jnp.int32)
-                return (winner, obs_telemetry.empty()) if telemetry \
-                    else winner
-            problem = HalvingProblem(data, medoid_centrality(backend, metric))
-            out = run_halving(problem, rounds, backend, key=key,
-                              telemetry=telemetry)
-            return (out.winner, out.telemetry) if telemetry else out.winner
+                verified = jnp.ones((), bool)
+                return (winner, verified, obs_telemetry.empty()) \
+                    if telemetry else (winner, verified)
+            problem = HalvingProblem(
+                data, medoid_centrality(eff_backend, metric))
+            widen = quant.margin(data, metric, precision, model=eff_err)
+            out = run_halving(problem, rounds, eff_backend, key=key,
+                              telemetry=telemetry, widen=widen)
+            winner, verified = quant.exact_winner(problem, out, metric)
+            return (winner, verified, out.telemetry) if telemetry \
+                else (winner, verified)
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("medoid", budget, metric, backend, eff_donate, telemetry),
-                 build)
+    return _memo(("medoid", budget, metric, eff_backend, eff_donate,
+                  telemetry, precision, eff_err), build)
 
 
 def batch_program(*, budget: int, metric: str = "l2",
                   backend: str = "reference", donate: bool = False,
-                  telemetry: bool = False) -> Callable:
+                  telemetry: bool = False, precision: str = "fp32",
+                  error_model: str = "probe") -> Callable:
     """Jitted batched medoid: ``(data (B, n, d), key) -> (B,) indices`` —
     or ``((B,) indices, telemetry)`` with ``telemetry`` (per-query rows,
     leaves ``(B, R)``; the shared static schedule columns broadcast).
 
     One shared static round schedule, per-query reference draws (the key is
     split per query); the whole batch is a single vmap of the scanned round
-    loop — one XLA program, one dispatch.
+    loop — one XLA program, one dispatch. Quantized (``precision != "fp32"``)
+    programs vmap the widened run + exact fp32 verification per query and
+    return ``((B,) indices, (B,) verified[, telemetry])`` — see
+    :func:`medoid_program`.
     """
     eff_donate = donate and donation_enabled()
+    eff_backend, eff_err = _quant_config(precision, error_model, backend)
 
     def build():
         def impl(data: jnp.ndarray, key: jax.Array):
@@ -116,39 +165,55 @@ def batch_program(*, budget: int, metric: str = "l2",
             keys = jax.random.split(key, b)
             if not rounds:                        # n == 1
                 winners = jnp.zeros((b,), jnp.int32)
+                outs = (winners,) if precision == "fp32" \
+                    else (winners, jnp.ones((b,), bool))
                 if telemetry:
-                    return winners, jax.tree_util.tree_map(
+                    outs = outs + (jax.tree_util.tree_map(
                         lambda x: jnp.broadcast_to(x, (b,) + x.shape),
-                        obs_telemetry.empty())
-                return winners
-            est = medoid_centrality(backend, metric)
-            order_fn = resolve_order_fn(backend)
+                        obs_telemetry.empty()),)
+                return outs[0] if len(outs) == 1 else outs
+            est = medoid_centrality(eff_backend, metric)
+            order_fn = resolve_order_fn(eff_backend)
 
             def one(x: jnp.ndarray, k: jax.Array):
-                out = run_halving(HalvingProblem(x, est), rounds, key=k,
+                problem = HalvingProblem(x, est)
+                if precision == "fp32":
+                    out = run_halving(problem, rounds, key=k,
+                                      survivor_order=order_fn,
+                                      telemetry=telemetry)
+                    return (out.winner, out.telemetry) if telemetry \
+                        else out.winner
+                from repro import quant
+
+                widen = quant.margin(x, metric, precision, model=eff_err)
+                out = run_halving(problem, rounds, key=k,
                                   survivor_order=order_fn,
-                                  telemetry=telemetry)
-                return (out.winner, out.telemetry) if telemetry \
-                    else out.winner
+                                  telemetry=telemetry, widen=widen)
+                winner, verified = quant.exact_winner(problem, out, metric)
+                return (winner, verified, out.telemetry) if telemetry \
+                    else (winner, verified)
 
             return jax.vmap(one)(data, keys)
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("batch", budget, metric, backend, eff_donate, telemetry),
-                 build)
+    return _memo(("batch", budget, metric, eff_backend, eff_donate,
+                  telemetry, precision, eff_err), build)
 
 
 def ragged_program(*, n_bucket: int, budget: int, metric: str = "l2",
                    backend: str = "reference", donate: bool = False,
-                   telemetry: bool = False) -> Callable:
+                   telemetry: bool = False, precision: str = "fp32",
+                   error_model: str = "probe") -> Callable:
     """Jitted ragged medoid: ``(data (B, n_bucket, d), lengths (B,), key) ->
     (B,) indices`` — or ``((B,) indices, telemetry)`` with ``telemetry``
     (leaves ``(B, R)``; the measured rows differ per query through its
     ``alive`` count and masked estimates, the schedule columns are the
     bucket's and broadcast). Padded arms are masked out of every round (arm
     and reference roles both); a query filling its bucket is bit-identical
-    to the single-query program."""
+    to the single-query program. Quantized programs additionally return the
+    per-query ``(B,) verified`` certificate — see :func:`medoid_program`."""
     eff_donate = donate and donation_enabled()
+    eff_backend, eff_err = _quant_config(precision, error_model, backend)
 
     def build():
         def impl(data: jnp.ndarray, lengths: jnp.ndarray,
@@ -158,33 +223,45 @@ def ragged_program(*, n_bucket: int, budget: int, metric: str = "l2",
             rounds = round_schedule(n_bucket, budget)
             if not rounds:                        # n_bucket == 1
                 winners = jnp.zeros((b,), jnp.int32)
+                outs = (winners,) if precision == "fp32" \
+                    else (winners, jnp.ones((b,), bool))
                 if telemetry:
-                    return winners, jax.tree_util.tree_map(
+                    outs = outs + (jax.tree_util.tree_map(
                         lambda x: jnp.broadcast_to(x, (b,) + x.shape),
-                        obs_telemetry.empty())
-                return winners
+                        obs_telemetry.empty()),)
+                return outs[0] if len(outs) == 1 else outs
             valid = (jnp.arange(n_bucket, dtype=jnp.int32)[None, :]
                      < lengths[:, None])
             keys = jax.random.split(key, b)
-            est = medoid_centrality(backend, metric)
-            order_fn = resolve_order_fn(backend)
+            est = medoid_centrality(eff_backend, metric)
+            order_fn = resolve_order_fn(eff_backend)
 
             def one(x: jnp.ndarray, v: jnp.ndarray, k: jax.Array):
                 # padded arms: ineligible to win (arm_mask) AND dropped from
                 # every reference draw / denominator (ref_mask) — one
                 # validity mask plays both roles.
                 problem = HalvingProblem(x, est, arm_mask=v, ref_mask=v)
+                if precision == "fp32":
+                    out = run_halving(problem, rounds, key=k,
+                                      survivor_order=order_fn,
+                                      telemetry=telemetry)
+                    return (out.winner, out.telemetry) if telemetry \
+                        else out.winner
+                from repro import quant
+
+                widen = quant.margin(x, metric, precision, model=eff_err)
                 out = run_halving(problem, rounds, key=k,
                                   survivor_order=order_fn,
-                                  telemetry=telemetry)
-                return (out.winner, out.telemetry) if telemetry \
-                    else out.winner
+                                  telemetry=telemetry, widen=widen)
+                winner, verified = quant.exact_winner(problem, out, metric)
+                return (winner, verified, out.telemetry) if telemetry \
+                    else (winner, verified)
 
             return jax.vmap(one)(data, valid, keys)
         return jax.jit(impl, donate_argnums=(0,) if eff_donate else ())
 
-    return _memo(("ragged", n_bucket, budget, metric, backend, eff_donate,
-                  telemetry), build)
+    return _memo(("ragged", n_bucket, budget, metric, eff_backend,
+                  eff_donate, telemetry, precision, eff_err), build)
 
 
 # ------------------------------ corpus programs -----------------------------

@@ -117,13 +117,23 @@ class Schedule(Sequence):
     def pulls(self) -> int:
         return sum(r.pulls for r in self.rounds)
 
-    def stacked(self, n: int, *, band_rounds: int = 3) -> StackedSchedule:
+    def stacked(self, n: int, *, band_rounds: int = 3,
+                slack: int = 1) -> StackedSchedule:
         """Band the schedule for an ``n``-arm problem (see
         :class:`StackedBand`). ``band_rounds`` caps rounds per band (the
         compile-vs-compute knob: 1 = per-round shapes, no waste; large =
-        one scan body, up to ``2^B/B``-fold extra scored pulls)."""
+        one scan body, up to ``2^B/B``-fold extra scored pulls).
+
+        ``slack > 1`` inflates every band's buffer width to
+        ``min(n, slack * sizes[start])`` — headroom for margin-widened
+        halving (``run_halving(widen=...)``), where a round may keep more
+        than ``sizes[r+1]`` arms. The per-round scheduled live counts are
+        unchanged; only the static buffer shapes grow.
+        """
         if band_rounds < 1:
             raise ValueError(f"band_rounds must be >= 1, got {band_rounds}")
+        if slack < 1:
+            raise ValueError(f"slack must be >= 1, got {slack}")
         if not self.rounds:
             raise ValueError("empty schedule has no stacked form")
         sizes = [int(n)]
@@ -139,7 +149,7 @@ class Schedule(Sequence):
             stop = min(start + band_rounds, r_stop)
             bands.append(StackedBand(
                 start=start,
-                width=sizes[start],
+                width=min(int(n), slack * sizes[start]),
                 ref_cap=max(rd.num_refs for rd in self.rounds[start:stop]),
                 survivors=tuple(sizes[start:stop]),
                 num_refs=tuple(rd.num_refs

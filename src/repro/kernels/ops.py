@@ -108,11 +108,13 @@ def kernel_cosine(x: jnp.ndarray, y: jnp.ndarray, interpret: bool | None = None)
     return 1.0 - kernel_dot(_unit_rows(x), _unit_rows(y), interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "interpret", "compute_dtype"))
 def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
                            metric: str = "l2",
                            interpret: bool | None = None,
-                           ref_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+                           ref_mask: jnp.ndarray | None = None,
+                           compute_dtype: str = "float32") -> jnp.ndarray:
     """Fused ``sum_j d(x_i, y_j)``: (C, d) x (R, d) -> (C,) distance sums.
 
     Every metric routes through a fused kernel (ℓ1 VPU kernel or the MXU
@@ -120,6 +122,12 @@ def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
     the memory-roofline win, now for all four metrics. ``ref_mask`` (shape
     (R,), nonzero = valid) drops invalid references from the sum *inside*
     the kernel — the ragged engine's padded arms never contribute.
+
+    ``compute_dtype="bfloat16"`` lowers the Gram-stage multiply precision
+    inside the MXU kernel (norms, metric epilogue, and accumulation stay
+    f32) — the quantized ``quant_bf16_fused`` backend's path. The ℓ1 VPU
+    kernel has no matmul stage; its inputs are representation-rounded
+    instead (the caller's job — see ``repro.quant.backends``).
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     c, r = x.shape[0], y.shape[0]
@@ -146,7 +154,8 @@ def kernel_centrality_sums(x: jnp.ndarray, y: jnp.ndarray, *,
     yn2p = _pad_to(yn2, 1, pk.BR)
     mask = _pad_ref_mask(ref_mask, r, yp.shape[0])
     return pk.dot_centrality(xp, yp, xn2p, yn2p, r, metric=metric,
-                             ref_mask=mask, interpret=interp)[:c, 0]
+                             ref_mask=mask, compute_dtype=compute_dtype,
+                             interpret=interp)[:c, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("keep", "interpret"))

@@ -50,15 +50,18 @@ L1_CHUNK = 16  # d-chunk inside the ℓ1 kernel: BC*BR*CHUNK*4B = 1 MiB VMEM
 # dot kernel (MXU): G[c, r] = sum_d X[c, d] * Y[r, d]
 # --------------------------------------------------------------------------
 
-def _dot_kernel(x_ref, y_ref, o_ref):
+def _dot_kernel(x_ref, y_ref, o_ref, *, compute_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]
-    y = y_ref[...]
+    # In-kernel quantization cast (the VMEM tile is rounded, never the HBM
+    # copy): bf16 multiplies run the MXU at its doubled rate; accumulation
+    # stays f32 via preferred_element_type either way.
+    x = x_ref[...].astype(compute_dtype)
+    y = y_ref[...].astype(compute_dtype)
     o_ref[...] += jax.lax.dot_general(
         x, y, dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -66,13 +69,18 @@ def _dot_kernel(x_ref, y_ref, o_ref):
 
 
 def dot_pairwise(x: jnp.ndarray, y: jnp.ndarray, *,
+                 compute_dtype: str = "float32",
                  interpret: bool = False) -> jnp.ndarray:
-    """X: (C, d), Y: (R, d) — C, R, d already padded to block multiples."""
+    """X: (C, d), Y: (R, d) — C, R, d already padded to block multiples.
+    ``compute_dtype`` sets the multiply precision (f32 accumulation always).
+    """
     c, d = x.shape
     r, _ = y.shape
     grid = (c // BC, r // BR, d // BD)
+    kern = functools.partial(_dot_kernel,
+                             compute_dtype=jnp.dtype(compute_dtype))
     return pl.pallas_call(
-        _dot_kernel,
+        kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BC, BD), lambda i, j, k: (i, k)),
@@ -199,7 +207,7 @@ def l1_centrality(x: jnp.ndarray, y: jnp.ndarray, r_true: int, *,
 # --------------------------------------------------------------------------
 
 def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, m_ref, o_ref,
-                           acc_ref, *, metric: str, nk: int):
+                           acc_ref, *, metric: str, nk: int, compute_dtype):
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -211,8 +219,11 @@ def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, m_ref, o_ref,
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # In-kernel quantization cast (see _dot_kernel); norms, the metric
+    # epilogue, and the accumulator stay f32.
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], y_ref[...], dimension_numbers=(((1,), (1,)), ((), ())),
+        x_ref[...].astype(compute_dtype), y_ref[...].astype(compute_dtype),
+        dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
 
@@ -232,6 +243,7 @@ def _dot_centrality_kernel(x_ref, y_ref, xn_ref, yn_ref, m_ref, o_ref,
 def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
                    yn2: jnp.ndarray, r_true: int, *, metric: str,
                    ref_mask: jnp.ndarray | None = None,
+                   compute_dtype: str = "float32",
                    interpret: bool = False) -> jnp.ndarray:
     """Row sums of ``d(X, Y)`` over the valid rows of Y for the MXU metrics,
     fused past the Gram stage.
@@ -252,7 +264,8 @@ def dot_centrality(x: jnp.ndarray, y: jnp.ndarray, xn2: jnp.ndarray,
         mask = mask * ref_mask.reshape(-1).astype(jnp.float32)
     grid = (c // BC, r // BR, d // BD)
     kern = functools.partial(_dot_centrality_kernel, metric=metric,
-                             nk=d // BD)
+                             nk=d // BD,
+                             compute_dtype=jnp.dtype(compute_dtype))
     return pl.pallas_call(
         kern,
         grid=grid,

@@ -46,7 +46,8 @@ from repro.runtime.fault_tolerance import elastic_remesh
 def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
         *, seed: int = 0, use_kernel: bool = False, distributed: bool = False,
         compare: bool = False, ckpt_dir: str | None = None,
-        backend: str = "reference", batch: int = 0, trace=None) -> dict:
+        backend: str = "reference", batch: int = 0, trace=None,
+        precision: str = "fp32") -> dict:
     key = jax.random.key(seed)
     if use_kernel and backend == "reference":
         backend = "pallas_pairwise"   # legacy flag -> kernel-backed blocks
@@ -68,12 +69,15 @@ def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
     budget = budget_per_arm * n
     sched = round_schedule(n, budget)
     out = {"n": n, "d": d, "metric": metric, "budget": budget,
-           "backend": backend,
+           "backend": backend, "precision": precision,
            "pulls_scheduled": schedule_pulls(n, budget),
            "rounds": [(r.survivors, r.num_refs) for r in sched]}
 
     cfg_kw = dict(metric=metric, backend=backend,
-                  budget_per_arm=budget_per_arm)
+                  budget_per_arm=budget_per_arm, precision=precision)
+    if distributed and precision != "fp32":
+        raise ValueError("--precision requires the single-host engine; "
+                         "run without --distributed")
     # --trace: switch the facade to the telemetry-carrying program variant
     # (answers stay bit-identical; the distributed engine isn't instrumented)
     with_tel = trace is not None and not (distributed
@@ -112,6 +116,10 @@ def run(n: int, d: int, metric: str, budget_per_arm: int, dataset: str,
                               telemetry=with_tel, **cfg_kw)
             medoid = res.medoid
             out["mode"] = backend
+            if precision != "fp32":
+                # True: the quantized certificate held; False: the answer
+                # came from the exact fp32 fallback (exact either way)
+                out["verified"] = res.verified
             if trace is not None:
                 trace.record_result(res)
     out["medoid"] = medoid
@@ -150,6 +158,11 @@ def main(argv=None):
                     help="legacy alias for --backend pallas_pairwise")
     ap.add_argument("--backend", default="reference",
                     choices=list(list_backends()))
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="distance precision: quantized Gram backends with "
+                         "margin-widened halving and exact fp32 survivor "
+                         "verification (answers stay fp32-exact)")
     ap.add_argument("--batch", type=int, default=0,
                     help="answer B independent queries in one dispatch")
     ap.add_argument("--distributed", action="store_true")
@@ -189,7 +202,8 @@ def main(argv=None):
                              distributed=args.distributed,
                              compare=args.compare,
                              ckpt_dir=args.ckpt_dir, backend=args.backend,
-                             batch=args.batch, trace=session)))
+                             batch=args.batch, trace=session,
+                             precision=args.precision)))
     finally:
         if session is not None:
             session.close()

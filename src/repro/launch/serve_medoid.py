@@ -62,6 +62,7 @@ from repro.engine import programs, stop_round
 from repro.obs import ServerMetrics, TraceSession, instrument_exposition, \
     telemetry_to_host
 from repro.serve.scheduler import LatencyModel, resolve_policy
+from repro import quant
 
 
 @dataclasses.dataclass
@@ -117,16 +118,29 @@ class MedoidServer:
                  compile_cache_dir: Optional[str] = None,
                  trace: Optional[TraceSession] = None,
                  policy="fifo", clock=None, collect_gaps: bool = True,
-                 latency_quantile: float = 0.9):
+                 latency_quantile: float = 0.9, precision: str = "fp32",
+                 quant_error_model: str = "probe"):
         if metric not in METRICS:
             raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
         get_backend(backend)      # fail at construction, not mid-dispatch
+        quant.check_precision(precision)
+        if quant_error_model not in quant.ERROR_MODELS:
+            raise ValueError(f"unknown error model {quant_error_model!r}; "
+                             f"one of {quant.ERROR_MODELS}")
         if compile_cache_dir:
             # persistent XLA cache: a restarted server re-traces known
             # buckets (cheap) but never re-compiles them (expensive)
             programs.enable_persistent_cache(compile_cache_dir)
         self.metric = metric
         self.backend = backend
+        # precision != "fp32" runs every dispatch on the quantized Gram
+        # backend with margin-widened halving + exact fp32 verification
+        # (see repro.quant); a batch whose certificate fails is re-answered
+        # by ONE exact fp32 dispatch with the same key, so served answers
+        # are always fp32-exact. ``quant_fallbacks`` counts those re-runs.
+        self.precision = precision
+        self.quant_error_model = quant_error_model
+        self.quant_fallbacks = 0
         self.budget_per_arm = budget_per_arm
         self.max_batch = max_batch
         self.min_bucket = min_bucket
@@ -219,15 +233,26 @@ class MedoidServer:
         timings: dict = {"buckets": {}, "traces": 0, "wall_s": 0.0}
         compiles0 = ragged_compile_count()
         t_all = time.time()
+        # warm EVERY program variant a live dispatch can select, at its
+        # exact dispatch-time cache key. The variant depends on runtime
+        # state (trace attached? gap collection toggled? quantized
+        # certificate failed?), and each is its own cached program —
+        # warming only one would leave the first metered call on another
+        # variant compiling:
+        #   * base and telemetry-carrying, at the server's precision
+        #     (quantized dispatches keep the buffer for a possible
+        #     fallback, so they run donate=False — fp32 donates);
+        #   * for a quantized server, additionally the exact fp32
+        #     fallback program (donate=True, no telemetry) that answers a
+        #     batch whose verification certificate failed.
+        variants = [(self.precision, with_tel, self.precision == "fp32")
+                    for with_tel in (False, True)]
+        if self.precision != "fp32":
+            variants.append(("fp32", False, True))
         for n, d in shapes:
             n_bucket = bucket_n(max(1, int(n)), self.min_bucket)
             t0 = time.time()
-            # warm BOTH program variants (base and telemetry-carrying): the
-            # variant a live dispatch selects depends on runtime state
-            # (trace attached? gap collection toggled?), and each variant is
-            # its own cached program — warming only one would leave the
-            # first metered call on the other variant compiling.
-            for with_tel in (False, True):
+            for prec, with_tel, don in variants:
                 data, lengths = pack_queries(
                     [jnp.zeros((1, int(d)), jnp.float32)],
                     min_bucket=n_bucket, pad_batch_to=self.max_batch)
@@ -235,8 +260,9 @@ class MedoidServer:
                     data, lengths, jax.random.key(0),
                     budget=self.budget_per_arm * n_bucket,
                     metric=self.metric, backend=self.backend,
-                    min_bucket=self.min_bucket, donate=True,
-                    telemetry=with_tel))
+                    min_bucket=self.min_bucket, donate=don,
+                    telemetry=with_tel, precision=prec,
+                    error_model=self.quant_error_model))
             timings["buckets"][f"{n_bucket}x{int(d)}"] = round(
                 time.time() - t0, 4)
         timings["traces"] = ragged_compile_count() - compiles0
@@ -298,14 +324,37 @@ class MedoidServer:
         with_tel = self._telemetry_on
         compiles0 = ragged_compile_count()
         t0 = time.time()
+        fellback = False
         try:
-            # donate=True: the packed batch buffer is server-owned and dead
-            # after this dispatch — the engine may reuse its memory
+            # donate only on the fp32 path: the packed batch buffer is
+            # server-owned and dead after an fp32 dispatch, but a quantized
+            # dispatch may need it again for the exact fp32 fallback — the
+            # fallback dispatch (the buffer's last use) takes it instead
             out = ragged_medoids(
                 data, lengths, sub, budget=budget, metric=self.metric,
                 backend=self.backend, min_bucket=self.min_bucket,
-                donate=True, telemetry=with_tel)
-            medoids, tel = out if with_tel else (out, None)
+                donate=self.precision == "fp32", telemetry=with_tel,
+                precision=self.precision,
+                error_model=self.quant_error_model)
+            if self.precision == "fp32":
+                medoids, tel = out if with_tel else (out, None)
+            else:
+                if with_tel:
+                    medoids, verified, tel = out
+                else:
+                    (medoids, verified), tel = out, None
+                if not bool(jnp.all(verified)):
+                    # certificate failed for some slot: ONE exact fp32
+                    # re-dispatch with the same key answers the whole
+                    # batch; verified slots keep the (identical) quantized
+                    # answer. Served answers are always fp32-exact.
+                    fellback = True
+                    fout = ragged_medoids(
+                        data, lengths, sub, budget=budget,
+                        metric=self.metric, backend=self.backend,
+                        min_bucket=self.min_bucket, donate=True,
+                        telemetry=False)
+                    medoids = jnp.where(verified, medoids, fout)
             medoids = [int(m) for m in medoids]      # block until ready
         except Exception:
             # dispatch failed: requests go back to the head of the queue so
@@ -322,6 +371,13 @@ class MedoidServer:
         rounds = round_schedule(n_bucket, budget)
         stop = stop_round(rounds)
         pulls = sum(r.pulls for r in rounds[: stop + 1])
+        if self.precision != "fp32":
+            # the exact verification epilogue's distance evals, plus the
+            # full fp32 re-run when the certificate failed
+            pulls += quant.verify_pulls(n_bucket, rounds)
+            if fellback:
+                self.quant_fallbacks += 1
+                pulls += sum(r.pulls for r in rounds[: stop + 1])
         self.dispatches += 1
         self.buckets_seen.add(bkey)
         finish = self._clock()
@@ -352,6 +408,9 @@ class MedoidServer:
                              traces={"ragged": traced} if traced else {},
                              dispatches={"ragged": 1}, bucket=label,
                              batch=len(batch), step=self._step)
+            if fellback:
+                self.trace.event("quant_fallback", bucket=label,
+                                 precision=self.precision, step=self._step)
             for slot, q in enumerate(batch):
                 # per-request rows: batched queries share the schedule
                 # columns but each slot's alive/theta/gap are its own
@@ -395,6 +454,8 @@ class MedoidServer:
             "policy": self.policy,
             "backend": self.backend,
             "metric": self.metric,
+            "precision": self.precision,
+            "quant_fallbacks": self.quant_fallbacks,
         }
 
     def metrics(self) -> dict:
@@ -433,6 +494,12 @@ def main(argv=None):
                     choices=["l1", "l2", "sql2", "cosine"])
     ap.add_argument("--backend", default="reference",
                     choices=list(list_backends()))
+    ap.add_argument("--precision", default="fp32",
+                    choices=list(quant.PRECISIONS),
+                    help="distance precision: quantized Gram + margin-"
+                         "widened halving + exact fp32 verification "
+                         "(failed certificates fall back to one exact "
+                         "fp32 dispatch)")
     ap.add_argument("--budget-per-arm", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--arrivals-per-step", type=int, default=4,
@@ -472,7 +539,8 @@ def main(argv=None):
                        budget_per_arm=args.budget_per_arm,
                        max_batch=args.max_batch, seed=args.seed,
                        compile_cache_dir=args.compile_cache,
-                       trace=session, policy=args.policy)
+                       trace=session, policy=args.policy,
+                       precision=args.precision)
     trace = synthetic_trace(args.requests, args.n_min, args.n_max, args.d,
                             seed=args.seed)
     warmup_stats = None

@@ -1,0 +1,158 @@
+"""Quantization-error model: how far can a quantized estimate drift?
+
+The engine's halving decisions compare per-arm centrality estimates
+``theta_i = mean_j d(x_i, x_j)`` over a *shared* reference draw. Quantizing
+the distance path perturbs every distance by at most some ``eps_d``
+(data-dependent), hence every estimate — a mean of distances — by at most
+the same ``eps_d``, identically for fp32 and quantized runs of the *same*
+draw. Widening the survivor cut by ``2 * eps_d`` therefore makes halving
+sound against quantization noise: any arm the fp32 scoring of the same
+round would keep has ``theta_f(i) <= cut_f``, so its quantized estimate
+satisfies ``theta_q(i) <= theta_f(i) + eps <= cut_f + eps <= cut_q +
+2*eps`` (the quantized cut can sit at most ``eps`` below the fp32 cut over
+the same alive set) — quantization alone can never evict it. That is the
+margin :func:`repro.engine.run_halving` applies when ``widen=`` is set, and
+why the exact fp32 epilogue (:mod:`repro.quant.verify`) then certifies the
+returned arm.
+
+Two error models, both pure traced device code (scan-body / vmap safe):
+
+``analytic``
+    Deterministic worst-case bounds from dtype resolution and data norms
+    (max row ℓ2/ℓ1/∞ norms). Certified but conservative by roughly
+    ``sqrt(d)`` versus typical rounding behavior — near-tie-dense data can
+    overflow the widened buffer's capacity and trigger the fp32 fallback.
+
+``probe`` (default)
+    Measured: the quantized and reference distance blocks are compared on a
+    small strided probe of the data's own rows, and the margin is the
+    observed maximum error times a safety factor. Realistic margins at a
+    high-probability (not adversarial) guarantee; the exact fp32
+    verification epilogue still holds unconditionally for the finalists.
+
+Per-metric analytic bounds (``M2/M1/Minf`` = max row ℓ2/ℓ1/∞ norm):
+
+* bf16 (unit roundoff ``u = 2^-8``; per-product relative bound ``EPS_BF16 =
+  2^-7`` covers both input roundings + fp32 accumulation slack):
+  ``|Δgram| <= EPS * M2^2`` (Cauchy–Schwarz), so sql2 ``<= 2 EPS M2^2``,
+  l2 ``<= sqrt(2 EPS) M2`` (via ``|sqrt(a) - sqrt(b)| <= sqrt(|a - b|)``),
+  cosine ``<= EPS`` (rows fp32-normalized first), l1 ``<= 2 u M1``.
+* int8 (per-row scale ``s_i = max|x_i| / 127 <= S = Minf / 127``; int32
+  accumulation is exact): ``|Δgram| <= S * M1 + d * S^2 / 4``, sql2/l2/
+  cosine as above (cosine stats taken on the unit rows), l1 ``<= d * S``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.quant.backends import check_precision, quant_pairwise
+
+#: Error models understood by :func:`margin`.
+ERROR_MODELS = ("probe", "analytic")
+
+#: Per-product relative bound for the bf16-multiply/fp32-accumulate Gram
+#: (two input roundings at unit roundoff 2^-8, doubled for fp32-accumulation
+#: slack and second-order terms).
+EPS_BF16 = 2.0 ** -7
+#: bf16 unit roundoff (per-element storage rounding, the ℓ1 path's scale).
+U_BF16 = 2.0 ** -8
+#: Probe safety factor: measured max error on the probe block times this.
+DEFAULT_SAFETY = 4.0
+#: Probe rows (strided over the data; the probe block is probe x probe).
+DEFAULT_PROBE = 64
+
+
+def _unit_rows(a: jnp.ndarray) -> jnp.ndarray:
+    af = a.astype(jnp.float32)
+    return af / jnp.maximum(jnp.linalg.norm(af, axis=-1, keepdims=True),
+                            1e-12)
+
+
+def _row_stats(data: jnp.ndarray):
+    """(max row ℓ2, max row ℓ1, max |entry|) — device scalars."""
+    af = jnp.abs(data.astype(jnp.float32))
+    m2 = jnp.sqrt(jnp.max(jnp.sum(af * af, axis=-1)))
+    m1 = jnp.max(jnp.sum(af, axis=-1))
+    minf = jnp.max(af)
+    return m2, m1, minf
+
+
+def _gram_bound(data: jnp.ndarray, precision: str) -> jnp.ndarray:
+    m2, m1, minf = _row_stats(data)
+    if precision == "bf16":
+        return EPS_BF16 * m2 * m2
+    d = data.shape[-1]
+    s = minf / 127.0
+    return s * m1 + d * s * s / 4.0
+
+
+def analytic_distance_bound(data: jnp.ndarray, metric: str,
+                            precision: str) -> jnp.ndarray:
+    """Certified worst-case ``max_pair |d_q - d_f|`` over rows of ``data``
+    (a device scalar; pure traced code)."""
+    check_precision(precision)
+    if precision == "fp32":
+        return jnp.zeros((), jnp.float32)
+    if metric == "cosine":
+        return 2.0 * _gram_bound(_unit_rows(data), precision)
+    if metric == "l1":
+        if precision == "bf16":
+            _, m1, _ = _row_stats(data)
+            return 2.0 * U_BF16 * m1
+        _, _, minf = _row_stats(data)
+        return data.shape[-1] * (minf / 127.0)
+    eg = _gram_bound(data, precision)
+    if metric == "sql2":
+        return 2.0 * eg
+    if metric == "l2":
+        return jnp.sqrt(2.0 * eg)
+    raise ValueError(f"unknown metric {metric!r}; "
+                     f"one of {distances.METRICS}")
+
+
+def probe_distance_bound(data: jnp.ndarray, metric: str, precision: str,
+                         probe: int = DEFAULT_PROBE) -> jnp.ndarray:
+    """Measured ``max |d_q - d_f|`` over a ``p x p`` block of ``p = min(n,
+    probe)`` evenly-strided rows (deterministic — no key), as a device
+    scalar. O(p^2 d) work, a small constant fraction of any real schedule's
+    pull budget.
+
+    The statistic is the max over probe arms of the *mean* absolute error
+    over probe references — the per-arm centrality perturbation the halving
+    estimates actually see (every estimate is a mean over a shared
+    reference draw, so signed per-distance errors largely cancel; the
+    per-distance max is ~an order of magnitude larger and realized by no
+    estimate). The self-pair diagonal is excluded: ``d(x_i, x_i) = 0`` and
+    the l2 sqrt turns an O(eps) Gram error into an O(sqrt(eps)) distance
+    error there, yet a self-pair contributes at most ``1/t_r`` of any
+    round's mean.
+    """
+    check_precision(precision)
+    if precision == "fp32":
+        return jnp.zeros((), jnp.float32)
+    n = int(data.shape[0])
+    p = min(n, int(probe))
+    idx = jnp.linspace(0.0, float(n - 1), p).round().astype(jnp.int32)
+    rows = data[idx]
+    dq = quant_pairwise(metric, precision)(rows, rows)
+    df = distances.pairwise(metric)(rows, rows)
+    err = jnp.abs(dq - df)
+    err = jnp.where(jnp.eye(p, dtype=bool), 0.0, err)
+    return jnp.max(jnp.sum(err, axis=1) / jnp.maximum(p - 1, 1))
+
+
+def margin(data: jnp.ndarray, metric: str, precision: str, *,
+           model: str = "probe", safety: float = DEFAULT_SAFETY,
+           probe: int = DEFAULT_PROBE) -> jnp.ndarray:
+    """The survivor-cut widening ``2 * eps_d`` for a quantized run (device
+    scalar; feeds ``run_halving(widen=...)``). ``model="analytic"`` uses the
+    certified bound; ``model="probe"`` (default) the measured probe error
+    times ``safety``."""
+    if model not in ERROR_MODELS:
+        raise ValueError(f"unknown error model {model!r}; "
+                         f"one of {ERROR_MODELS}")
+    if model == "analytic":
+        return 2.0 * analytic_distance_bound(data, metric, precision)
+    return 2.0 * safety * probe_distance_bound(data, metric, precision,
+                                               probe=probe)

@@ -1,0 +1,63 @@
+"""Exact fp32 verification epilogue for quantized halving runs.
+
+A quantized run ends with a widened survivor buffer: up to ``2 * s_stop``
+finalists (the margin-retained arms), a traced live count, and a
+``margin_ok`` flag saying whether every margin-widened survivor set fit its
+buffer all the way down (see ``run_halving(widen=...)``). This module
+spends one exact fp32 n-vector per finalist — the same one-vector trick the
+SWAP phase and the corpus mutation kernels use — to score every live
+finalist against the FULL reference set in the reference backend, and
+returns the exact-centrality argmin. The returned arm is therefore exactly
+the fp32 medoid *of the finalist set*, unconditionally; when ``margin_ok``
+held, the margins guarantee quantization never evicted an arm a same-draw
+fp32 round would have kept, which is the ``verified`` certificate the
+facade reports.
+
+Cost: ``verify_width(n, rounds) * n`` distance evaluations — a vanishing
+fraction of the schedule at production n (the finalist buffer is O(1)-ish),
+accounted in ``MedoidResult.pulls``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.engine.halving import WIDEN_SLACK, HalvingOutcome, HalvingProblem
+from repro.engine.schedule import as_schedule
+
+
+def verify_width(n: int, rounds) -> int:
+    """Static width of the widened output-round survivor buffer (the number
+    of finalists the epilogue scores) — ``min(n, WIDEN_SLACK * s_stop)``,
+    derived from the same stacked schedule the engine runs."""
+    stk = as_schedule(rounds).stacked(n)
+    return min(int(n), WIDEN_SLACK * stk.sizes[stk.r_stop])
+
+
+def verify_pulls(n: int, rounds) -> int:
+    """Distance evaluations the epilogue spends: one n-vector per finalist."""
+    return verify_width(n, rounds) * int(n)
+
+
+def exact_winner(problem: HalvingProblem, out: HalvingOutcome,
+                 metric: str):
+    """Exact fp32 winner among the live finalists of a widened outcome.
+
+    Returns ``(winner, verified)``: the global index of the finalist with
+    the smallest exact fp32 centrality over all (valid) references, and the
+    run's ``margin_ok`` flag. Pure traced code — safe under vmap (the
+    batched/ragged quantized programs map it per query).
+    """
+    data = problem.data
+    surv = out.survivors
+    ref_mask = None
+    if problem.ref_mask is not None:
+        ref_mask = problem.ref_mask.astype(jnp.float32)
+    sums = distances.centrality_sums(data[surv], data, metric,
+                                     ref_mask=ref_mask)
+    alive = jnp.arange(surv.shape[0], dtype=jnp.int32) < out.live
+    theta = jnp.where(alive, sums, jnp.inf)
+    if problem.arm_mask is not None:
+        theta = jnp.where(problem.arm_mask[surv], theta, jnp.inf)
+    pos = jnp.argmin(theta)
+    return surv[pos], out.margin_ok

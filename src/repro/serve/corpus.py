@@ -74,15 +74,27 @@ class CorpusStore:
     def __init__(self, d: int, *, metric: str = "l2",
                  backend: str = "reference",
                  min_bucket: int = DEFAULT_MIN_BUCKET,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None,
+                 precision: str = "fp32"):
         if d < 1:
             raise ValueError(f"need d >= 1, got {d}")
         if metric not in METRICS:
             raise ValueError(f"unknown metric {metric!r}; one of {METRICS}")
+        if precision != "fp32":
+            # Quantized store: every distance path — the bootstrap pass, the
+            # per-mutation n-vectors, and maintenance re-runs (which use
+            # store.backend) — rides the quantized backend for this
+            # precision. The incremental centralities are then *quantized*-
+            # exact: the float32-cancellation caveat above applies on top of
+            # the quantization perturbation, so ties within the quantization
+            # error may resolve differently than the fp32 store's.
+            from repro import quant
+            backend = quant.backend_for(precision, base=backend)
         get_backend(backend)            # fail at construction
         self.d = int(d)
         self.metric = metric
         self.backend = backend
+        self.precision = precision
         self.min_bucket = int(min_bucket)
         cap = bucket_n(max(1, int(capacity or min_bucket)), self.min_bucket)
         self.buf = jnp.zeros((cap, self.d), jnp.float32)

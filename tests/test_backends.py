@@ -16,7 +16,11 @@ from repro.core import (METRICS, corr_sh_medoid, corr_sh_medoid_batch,
                         register_backend)
 from repro.core.backend import DistanceBackend
 
-BACKENDS = list_backends()
+# exact fp32 backends only: the quantized backends (repro.quant)
+# are perturbed estimators by design — their parity/determinism
+# contracts live in tests/test_quant.py and the quant section of
+# tests/test_backends.py, at quantization-error tolerances
+BACKENDS = [b for b in list_backends() if not b.startswith("quant_")]
 
 # one block-aligned shape (BC=128, BR=128, BD=256) and two ragged ones
 SHAPES = [(128, 128, 256), (130, 67, 40), (3, 5, 2)]
@@ -152,3 +156,78 @@ def test_ragged_same_medoids_under_every_backend(metric):
              corr_sh_medoid_ragged(data, lengths, key, budget=64 * 15,
                                    metric=metric, backend="pallas_fused")]
     assert rerun == meds["pallas_fused"]
+
+
+# --------------------- quantized backends (repro.quant) ---------------------
+# Excluded from the fp32 parametrizations above on purpose: quantized
+# estimates are PERTURBED by design. Their contracts are (a) registry
+# resolution through the plugin hook, (b) agreement with the reference
+# block at quantization-error tolerances, (c) bit-exact determinism —
+# the same inputs quantize identically on every call and across the
+# jnp/Pallas implementations of the same precision.
+
+QUANT_BACKENDS = ("quant_bf16", "quant_int8", "quant_bf16_fused")
+
+
+@pytest.mark.quant
+def test_quant_registry_resolution():
+    """The quant backends register lazily through the plugin hook: both
+    get_backend by name and the precision->backend mapping resolve."""
+    from repro.quant import backend_for
+
+    for name in QUANT_BACKENDS:
+        assert get_backend(name).name == name
+        assert get_backend(name) is get_backend(name)
+    assert set(QUANT_BACKENDS) <= set(list_backends())
+    assert backend_for("fp32") is None
+    assert backend_for("bf16") == "quant_bf16"
+    assert backend_for("bf16", base="pallas_fused") == "quant_bf16_fused"
+    assert backend_for("int8", base="pallas_fused") == "quant_int8"
+    with pytest.raises(ValueError, match="unknown precision"):
+        backend_for("fp8")
+
+
+@pytest.mark.quant
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", QUANT_BACKENDS)
+def test_quant_pairwise_tracks_reference(backend, metric):
+    """Quantized blocks agree with the reference block at quantization-error
+    tolerances (bf16: ~2^-8 relative on the Gram; int8: per-row-scale
+    rounding) — loose enough for the perturbation, tight enough to catch a
+    wrong epilogue or a dropped dequantization scale."""
+    x, y = _data(130, 67, 24, seed=5)
+    got = get_backend(backend).pairwise(metric)(x, y)
+    want = pairwise(metric)(x, y)
+    assert got.shape == want.shape
+    tol = 0.02 if "bf16" in backend else 0.2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.quant
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", QUANT_BACKENDS)
+def test_quant_determinism(backend, metric):
+    """Same inputs -> bit-identical outputs on every call (quantization is
+    a pure function; no data-dependent rounding state)."""
+    x, y = _data(66, 34, 12, seed=9)
+    be = get_backend(backend)
+    a = np.asarray(be.centrality_sums(metric)(x, y))
+    b = np.asarray(be.centrality_sums(metric)(x, y))
+    np.testing.assert_array_equal(a, b)
+    p1 = np.asarray(be.pairwise(metric)(x, y))
+    p2 = np.asarray(be.pairwise(metric)(x, y))
+    np.testing.assert_array_equal(p1, p2)
+
+
+@pytest.mark.quant
+@pytest.mark.parametrize("metric", METRICS)
+def test_quant_bf16_fused_matches_jnp_bf16(metric):
+    """The Pallas in-kernel-cast centrality and the jnp bf16 path compute
+    the same quantity (bf16-rounded inputs, fp32 accumulation); kernel
+    blocking may reorder fp32 adds, so equality is near-bit, not bit."""
+    x, y = _data(96, 80, 16, seed=3)
+    a = get_backend("quant_bf16").centrality_sums(metric)(x, y)
+    b = get_backend("quant_bf16_fused").centrality_sums(metric)(x, y)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)

@@ -35,7 +35,11 @@ from repro.engine import (ArmEstimator, HalvingProblem, build_delta,
 
 pytestmark = pytest.mark.engine
 
-BACKENDS = list_backends()
+# exact fp32 backends only: the quantized backends (repro.quant)
+# are perturbed estimators by design — their parity/determinism
+# contracts live in tests/test_quant.py and the quant section of
+# tests/test_backends.py, at quantization-error tolerances
+BACKENDS = [b for b in list_backends() if not b.startswith("quant_")]
 NS = (2, 64, 257, 1024)
 
 # (medoid, pulls) recorded from the PRE-refactor code (commit e63c8bc) for
@@ -324,3 +328,29 @@ def test_fused_estimator_capability_is_consulted():
         HalvingProblem(data, medoid_centrality("_test_rigged", "l2")),
         rounds, key=jax.random.key(5))
     assert int(out.winner) == n - 1                      # rigged, not medoid
+
+
+# --------------------- precision plumbing stays bit-exact --------------------
+
+@pytest.mark.quant
+def test_precision_fp32_bit_identical_goldens():
+    """``precision="fp32"`` is the NO-OP point of the quantized subsystem:
+    it must route through the very same memoized fp32 program as the
+    default call — identical golden (medoid, pulls), no certificate, and
+    program-object identity (the error model must not leak into the fp32
+    cache key: every fp32 caller shares one program)."""
+    from repro.engine import programs
+
+    for n in NS:
+        data, key, _ = _case(n)
+        plain = find_medoid(data, key, budget_per_arm=16)
+        explicit = find_medoid(data, key, budget_per_arm=16,
+                               precision="fp32")
+        assert (explicit.medoid, explicit.pulls) == \
+            (plain.medoid, plain.pulls) == GOLDEN[n]
+        assert explicit.verified is None and plain.verified is None
+    assert programs.medoid_program(budget=16 * 64, metric="l2",
+                                   backend="reference") is \
+        programs.medoid_program(budget=16 * 64, metric="l2",
+                                backend="reference", precision="fp32",
+                                error_model="analytic")
